@@ -1,0 +1,51 @@
+"""Shared benchmark plumbing: the algorithm zoo under the alpha-beta model
+(paper calibration: QDR InfiniBand, units = MPI_INT as in the tables) and
+the CSV emitter (`name,us_per_call,derived`)."""
+from __future__ import annotations
+
+import sys
+
+from repro.core import CostParams, allreduce_time, baselines, \
+    build_gather_tree, simulate_gather
+from repro.core import extensions as ext
+from repro.core.distributions import NAMES, block_sizes
+from repro.core.guidelines import regular_gather_time
+
+# Calibrated so TUW_Gatherv magnitudes land near the paper's Tables 1-6
+# (DESIGN.md §9): alpha ~ 1.8us startup, beta ~ 1.4ns per 4-byte int.
+PARAMS = CostParams.infiniband_qdr()
+
+SIZES_B = (1, 10, 100, 1_000, 10_000)
+
+
+def gatherv_times(m, root, params=PARAMS):
+    """All gatherv algorithms on one problem.  Times in us."""
+    out = {}
+    tuw = build_gather_tree(m, root=root)
+    out["tuw"] = ext.simulate_gather_overlapped_construction(tuw, params)
+    out["tuw_serial"] = simulate_gather(tuw, params,
+                                        include_construction=True)
+    out["linear"] = simulate_gather(baselines.linear_tree(m, root), params)
+    out["binomial"] = simulate_gather(baselines.binomial_tree(m, root),
+                                      params)
+    out["knomial3"] = simulate_gather(baselines.knomial_tree(m, root, 3),
+                                      params)
+    out["two_level"] = simulate_gather(
+        baselines.two_level_tree(m, root, 16), params)
+    return out
+
+
+def gather_regular(p, per_block, root, params=PARAMS):
+    """MPI_Gather analog: binomial tree on equal blocks."""
+    return regular_gather_time(p, per_block, root, params)
+
+
+def guideline2_rhs(m, root, params=PARAMS):
+    return (allreduce_time(len(m), 1, params)
+            + regular_gather_time(len(m), max(m), root, params))
+
+
+def emit(rows, file=sys.stdout):
+    """CSV per harness contract: name,us_per_call,derived."""
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}", file=file)

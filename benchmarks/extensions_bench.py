@@ -1,0 +1,59 @@
+"""Beyond-paper extensions, quantified (EXPERIMENTS §Perf B):
+graceful degradation (paper §3 sketch), k-ported trees (§2 remark),
+segmentation vs the Lemma-2 penalty, overlapped construction."""
+from __future__ import annotations
+
+from repro.core import (CostParams, build_gather_tree,
+                        lemma2_penalty_bound, simulate_gather)
+from repro.core import extensions as ext
+from repro.core.distributions import block_sizes
+
+from .common import PARAMS, emit
+
+P = 6400
+
+
+def run(emit_rows=True):
+    rows = []
+    root = P // 2
+    # graceful degradation: bytes + 2-ported time
+    for name in ("spikes", "random"):
+        m = block_sizes(name, P, 10_000, seed=42)
+        base = build_gather_tree(m, root=root)
+        thr = ext.auto_threshold(m, PARAMS) + max(m)
+        deg = build_gather_tree(m, root=root, degrade_threshold=thr)
+        rows.append((f"ext_degradation/{name}",
+                     ext.simulate_gather_kported(deg, PARAMS, 2),
+                     f"bytes={deg.total_bytes_moved()};"
+                     f"base_bytes={base.total_bytes_moved()};"
+                     f"saved={1 - deg.total_bytes_moved() / base.total_bytes_moved():.0%};"
+                     f"base_2port_us={ext.simulate_gather_kported(base, PARAMS, 2):.0f}"))
+    # k-ported
+    m = block_sizes("random", P, 100, seed=42)
+    for k in (1, 2, 3):
+        t = ext.build_kported_tree(m, k, root=root)
+        rows.append((f"ext_kported/k{k}",
+                     ext.simulate_gather_kported(t, PARAMS, k),
+                     f"rounds={t.rounds}"))
+    # segmentation vs the fixed-root penalty
+    p2 = 4096
+    m = [1] * p2
+    for i in range(p2 // 2, p2):
+        m[i] = 2000
+    t = build_gather_tree(m, root=0)
+    plain = simulate_gather(t, PARAMS)
+    seg = ext.simulate_gather_segmented(t, m, PARAMS, 8192)
+    rows.append(("ext_segmentation/heavy_upper_half", seg,
+                 f"plain_us={plain:.0f};"
+                 f"penalty_bound_us={lemma2_penalty_bound(t, m, PARAMS.beta):.0f};"
+                 f"saved={1 - seg / plain:.0%}"))
+    # overlapped construction
+    m = block_sizes("same", P, 1)
+    t = build_gather_tree(m, root=root)
+    ser = simulate_gather(t, PARAMS, include_construction=True)
+    ov = ext.simulate_gather_overlapped_construction(t, PARAMS)
+    rows.append(("ext_overlapped_construction/same_b1", ov,
+                 f"serial_us={ser:.1f};saved={1 - ov / ser:.0%}"))
+    if emit_rows:
+        emit(rows)
+    return rows, None

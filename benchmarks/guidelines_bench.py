@@ -1,0 +1,43 @@
+"""The guideline-violation matrix (the paper's red entries, §4-5):
+for every (p, distribution, size): does each algorithm satisfy
+  G1: Gather(m) <= Gatherv(m)            (regular case)
+  G2: Gatherv(m) <= Allreduce(1) + Gather(p*max m)
+TUW fulfills both everywhere (with overlapped construction); the
+library-analog algorithms (linear, binomial-oblivious) fail G2 at small
+and medium sizes by large factors — the paper's central claim."""
+from __future__ import annotations
+
+from repro.core.distributions import NAMES, block_sizes
+
+from .common import PARAMS, SIZES_B, emit, gather_regular, gatherv_times, \
+    guideline2_rhs
+
+PS = (560, 1600, 6400)
+
+
+def run(emit_rows=True):
+    rows = []
+    stats = {}
+    for algo in ("tuw", "linear", "binomial", "knomial3", "two_level"):
+        stats[algo] = {"g2_viol": 0, "cells": 0, "worst": 1.0}
+    for p in PS:
+        root = p // 2
+        for name in NAMES:
+            for b in SIZES_B:
+                m = block_sizes(name, p, b, seed=42)
+                gv = gatherv_times(m, root)
+                rhs = guideline2_rhs(m, root)
+                for algo in stats:
+                    stats[algo]["cells"] += 1
+                    ratio = gv[algo] / max(rhs, 1e-9)
+                    if ratio > 1.0:
+                        stats[algo]["g2_viol"] += 1
+                        stats[algo]["worst"] = max(stats[algo]["worst"],
+                                                   ratio)
+    for algo, s in stats.items():
+        rows.append((f"guideline2_matrix/{algo}", 0.0,
+                     f"violations={s['g2_viol']}/{s['cells']}"
+                     f";worst_factor={s['worst']:.1f}x"))
+    if emit_rows:
+        emit(rows)
+    return rows, stats

@@ -1,0 +1,89 @@
+"""Measured wall-clock of the JAX TUW gatherv vs the padded all-gather
+(G2's manual alternative) on 8 host devices.  Runs in a SUBPROCESS with
+its own XLA_FLAGS so the main benchmark process keeps 1 device."""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from .common import emit
+
+_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, time
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core.distributions import NAMES, block_sizes
+from repro.core.jax_collectives import gatherv_shard, plan_gatherv
+
+mesh = jax.make_mesh((8,), ("x",))
+out = {}
+for name in NAMES:
+    for b in (64, 1024):
+        sizes = block_sizes(name, 8, b, seed=3)
+        plan = plan_gatherv(sizes, 3)
+        fn = jax.jit(jax.shard_map(lambda xl: gatherv_shard(xl, plan, "x"),
+                                   mesh=mesh, in_specs=P("x"),
+                                   out_specs=P("x")))
+        x = jax.device_put(np.random.randn(plan.p * plan.cap, 16)
+                           .astype(np.float32),
+                           NamedSharding(mesh, P("x")))
+        fn(x).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(20):
+            r = fn(x)
+        r.block_until_ready()
+        tuw_us = (time.perf_counter() - t0) / 20 * 1e6
+
+        # padded all-gather alternative (Guideline 2 RHS on-device)
+        cap = plan.cap
+        ag = jax.jit(jax.shard_map(
+            lambda xl: jax.lax.all_gather(xl, "x"),
+            mesh=mesh, in_specs=P("x"), out_specs=P("x")))
+        ag(x).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(20):
+            r = ag(x)
+        r.block_until_ready()
+        pad_us = (time.perf_counter() - t0) / 20 * 1e6
+        out[f"{name}/b{b}"] = {
+            "tuw_us": tuw_us, "padded_allgather_us": pad_us,
+            "exact_bytes": plan.tree_bytes_exact * 64,
+            "padded_bytes": plan.tree_bytes_padded * 64,
+            "allgather_bytes": 8 * 7 * cap * 64,
+        }
+print("RESULT " + json.dumps(out))
+"""
+
+
+def run(emit_rows=True):
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", _CHILD], env=env,
+                         capture_output=True, text=True, timeout=900)
+    rows = []
+    if res.returncode != 0:
+        rows.append(("jax_runtime/error", 0.0,
+                     res.stderr.strip().splitlines()[-1][:120]
+                     if res.stderr else "unknown"))
+        if emit_rows:
+            emit(rows)
+        return rows, {}
+    data = json.loads(res.stdout.split("RESULT ", 1)[1])
+    for tag, d in data.items():
+        rows.append((f"jax_gatherv_tuw/{tag}", d["tuw_us"],
+                     f"bytes={d['exact_bytes']}"))
+        rows.append((f"jax_padded_allgather/{tag}",
+                     d["padded_allgather_us"],
+                     f"bytes={d['allgather_bytes']};"
+                     f"byte_saving={1 - d['padded_bytes']/max(d['allgather_bytes'],1):.0%}"))
+    if emit_rows:
+        emit(rows)
+    return rows, data

@@ -1,0 +1,68 @@
+"""The paper's technique applied inside the model: per-expert token loads
+from a REAL routed batch (reduced mixtral/deepseek router) are irregular;
+compare the bytes/time of expert combine under (a) padded all-gather,
+(b) direct sends, (c) the TUW gatherv tree, in the ICI cost model."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import CostParams, baselines, build_gather_tree, \
+    simulate_gather
+from repro.core import extensions as ext
+from repro.core.guidelines import regular_gather_time
+from repro.models import init_params
+from repro.models.moe import moe_apply
+
+from .common import emit
+
+ICI = CostParams(alpha=1.0, beta=1.0 / 50e3)  # us, bytes
+
+
+def expert_loads(arch: str, batch=4, seq=64):
+    cfg = get_config(arch).reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (batch, seq, cfg.d_model), jnp.float32)
+    # find a moe block's params
+    body = params["body"]
+    moe_p = None
+    for blk in body:
+        if "ffn" in blk and "router" in blk.get("ffn", {}):
+            moe_p = jax.tree.map(lambda a: a[0], blk["ffn"])
+            break
+    _, aux = moe_apply(moe_p, x, cfg.moe)
+    return np.asarray(aux["load"]), cfg
+
+
+def run(emit_rows=True):
+    rows = []
+    for arch in ("mixtral-8x7b", "deepseek-moe-16b"):
+        loads, cfg = expert_loads(arch)
+        # scale the measured load *distribution* to production dims: the
+        # full config's expert count and d_model, 64k routed assignments
+        full = get_config(arch)
+        E = full.moe.n_experts
+        frac = np.asarray(loads, np.float64)
+        frac = np.resize(frac / frac.sum(), E)
+        frac = frac / frac.sum()
+        bytes_per_tok = full.d_model * 2  # bf16 activations
+        for regime, tokens in (("decode", 256), ("prefill", 65_536)):
+            m = [max(1, int(f * tokens)) * bytes_per_tok for f in frac]
+            root = 0
+            tuw = build_gather_tree(m, root=root)
+            t_tuw = ext.simulate_gather_overlapped_construction(tuw, ICI)
+            t_lin = simulate_gather(baselines.linear_tree(m, root), ICI)
+            t_pad = regular_gather_time(E, max(m), root, ICI)
+            rows.append((f"moe_combine_tuw/{arch}/{regime}", t_tuw,
+                         f"E={E};total_MB={sum(m)/1e6:.1f}"))
+            rows.append((f"moe_combine_direct/{arch}/{regime}", t_lin,
+                         f"vs_tuw={t_lin/max(t_tuw,1e-9):.2f}x"))
+            rows.append((f"moe_combine_padded/{arch}/{regime}", t_pad,
+                         f"vs_tuw={t_pad/max(t_tuw,1e-9):.2f}x"))
+    if emit_rows:
+        emit(rows)
+    return rows, None

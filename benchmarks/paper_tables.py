@@ -1,0 +1,51 @@
+"""Tables 1-6 reproduction: six block-size distributions x weak-scaling
+sizes at p = 560 (Tables 1-3) and p = 1600/3200/6400 (Tables 4-6), in the
+alpha-beta model.  'library' columns map to the algorithms MPI libraries
+actually use (linear gatherv / binomial gather — the paper's finding);
+TUW_Gatherv is ours.  Guideline violations are flagged like the paper's
+red entries."""
+from __future__ import annotations
+
+from repro.core.distributions import NAMES, block_sizes
+
+from .common import PARAMS, SIZES_B, emit, gather_regular, gatherv_times, \
+    guideline2_rhs
+
+PS = (560, 1600, 3200, 6400)
+
+
+def run(emit_rows=True):
+    rows = []
+    violations = {"g1": 0, "g2_lib": 0, "g2_tuw": 0, "cells": 0}
+    for p in PS:
+        root = p // 2
+        for name in NAMES:
+            for b in SIZES_B:
+                m = block_sizes(name, p, b, seed=42)
+                total = sum(m)
+                gv = gatherv_times(m, root)
+                g_reg = gather_regular(p, max(1, total // p), root)
+                rhs = guideline2_rhs(m, root)
+                violations["cells"] += 1
+                if name == "same" and g_reg > gv["tuw"]:
+                    violations["g1"] += 1
+                if gv["linear"] > rhs:
+                    violations["g2_lib"] += 1
+                if gv["tuw"] > rhs:
+                    violations["g2_tuw"] += 1
+                tag = f"p{p}/{name}/b{b}"
+                rows.append((f"table_gatherv_tuw/{tag}", gv["tuw"],
+                             f"total={total}"))
+                rows.append((f"table_gatherv_linear/{tag}", gv["linear"],
+                             f"speedup_tuw={gv['linear']/max(gv['tuw'],1e-9):.2f}x"))
+                rows.append((f"table_gatherv_binomial/{tag}", gv["binomial"],
+                             f"speedup_tuw={gv['binomial']/max(gv['tuw'],1e-9):.2f}x"))
+                rows.append((f"table_gather_regular/{tag}", g_reg,
+                             f"g2_rhs={rhs:.2f}"))
+    rows.append(("table_guideline_violations/summary", 0.0,
+                 f"g2_lib={violations['g2_lib']}/{violations['cells']}"
+                 f";g2_tuw={violations['g2_tuw']}/{violations['cells']}"
+                 f";g1={violations['g1']}/{violations['cells']}"))
+    if emit_rows:
+        emit(rows)
+    return rows, violations

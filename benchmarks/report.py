@@ -1,0 +1,41 @@
+"""Render the §Roofline tables as markdown from results/dryrun/*.json:
+
+    PYTHONPATH=src python -m benchmarks.report          # baselines
+    PYTHONPATH=src python -m benchmarks.report --variants
+"""
+from __future__ import annotations
+
+import argparse
+
+from .roofline import load_all
+
+
+def render(mesh: str, variants: bool) -> str:
+    cells = [c for c in load_all() if c["mesh"] == mesh
+             and (variants or c["variant"] == "baseline")]
+    out = [f"### {mesh} ({'all variants' if variants else 'baseline'})",
+           "",
+           "| arch | shape | variant | compute s | memory s | collective s"
+           " | dominant | useful | peak GB/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for c in sorted(cells, key=lambda c: (c["arch"], c["shape"],
+                                          c["variant"])):
+        out.append(
+            f"| {c['arch']} | {c['shape']} | {c['variant']} | "
+            f"{c['compute_s']:.3g} | {c['memory_s']:.3g} | "
+            f"{c['collective_s']:.3g} | {c['dominant']} | "
+            f"{c['useful_ratio']:.2f} | {c['peak_gb']:.1f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variants", action="store_true")
+    args = ap.parse_args()
+    for mesh in ("single", "multipod"):
+        print(render(mesh, args.variants))
+        print()
+
+
+if __name__ == "__main__":
+    main()

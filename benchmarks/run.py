@@ -1,0 +1,25 @@
+"""Benchmark harness entry: one module per paper table/figure plus the
+framework benches.  Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import extensions_bench, guidelines_bench, jax_runtime, \
+        moe_dispatch, paper_tables, roofline, variants
+    t0 = time.time()
+    print("name,us_per_call,derived")
+    paper_tables.run()
+    variants.run()
+    guidelines_bench.run()
+    extensions_bench.run()
+    moe_dispatch.run()
+    jax_runtime.run()
+    roofline.run()
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,18 @@
+"""Serving example: batched prefill + decode with ragged prompt lengths
+(continuous-batching-lite) on the hybrid recurrentgemma family.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+env = dict(os.environ)
+env["PYTHONPATH"] = os.path.join(ROOT, "src")
+subprocess.run(
+    [sys.executable, "-m", "repro.launch.serve",
+     "--arch", "recurrentgemma-2b", "--reduced",
+     "--requests", "8", "--batch", "4", "--prompt-len", "24", "--gen", "16"],
+    env=env, check=True)

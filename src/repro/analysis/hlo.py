@@ -1,0 +1,82 @@
+"""Parse compiled HLO text for collective operations and their bytes.
+
+``compiled.cost_analysis()`` has no collective term, so the roofline's
+collective component is derived here: sum the operand bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+in the post-SPMD optimized HLO (``compiled.as_text()``).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather-start", "all-gather",
+    "all-reduce-start", "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute-start", "collective-permute",
+)
+
+# e.g.  %x = bf16[8,128]{1,0} all-reduce(bf16[8,128]{1,0} %y), ...
+_OP_RE = re.compile(
+    r"=\s*(?P<result>[^\s]+)\s+(?P<op>" + "|".join(_COLLECTIVES) + r")\("
+    r"(?P<operands>[^)]*)\)"
+)
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    """Per-device collective traffic of one compiled SPMD program."""
+
+    ops: dict = field(default_factory=lambda: defaultdict(int))
+    bytes_by_kind: dict = field(default_factory=lambda: defaultdict(int))
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_ops(self) -> int:
+        return sum(self.ops.values())
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> CollectiveStats:
+    """Sum operand bytes of every collective op in optimized HLO text.
+
+    Operand shapes appear inline in HLO operand lists; '-start' variants
+    (async overlap) are counted once ('-done' ops carry no payload).
+    """
+    stats = CollectiveStats()
+    for m in _OP_RE.finditer(hlo_text):
+        op = m.group("op").replace("-start", "")
+        operand_bytes = _shape_bytes(m.group("operands"))
+        if operand_bytes == 0:
+            # fall back to result shape (some dumps omit operand shapes)
+            operand_bytes = _shape_bytes(m.group("result"))
+        stats.ops[op] += 1
+        stats.bytes_by_kind[op] += operand_bytes
+    return stats

@@ -1,0 +1,3 @@
+from .store import (  # noqa: F401
+    AsyncCheckpointer, latest_step, restore, save, plan_consolidation,
+)

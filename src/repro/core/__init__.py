@@ -1,0 +1,18 @@
+"""Core of the reproduction: Träff 2017 linear-time irregular gather/scatter.
+
+Centralized reference (Lemmas 1-2), fully distributed protocol (Lemma 3),
+alpha-beta cost model, baselines the paper compares against, performance
+guidelines (G1/G2), beyond-paper extensions, and the JAX shard_map
+collectives built on the trees.
+"""
+from .treegather import (  # noqa: F401
+    Edge, GatherTree, Merge, build_gather_tree, ceil_log2,
+    construction_alpha_rounds, lemma2_penalty_bound, theorem1_bound,
+)
+from .distributed import (  # noqa: F401
+    Plan, ProtocolStats, assemble_tree, build_gather_tree_distributed,
+)
+from .costmodel import (  # noqa: F401
+    CostParams, allreduce_time, simulate_gather, simulate_scatter,
+)
+from . import baselines, distributions, guidelines  # noqa: F401

@@ -1,0 +1,130 @@
+"""Baseline gather/scatter trees the paper compares against.
+
+All return :class:`repro.core.treegather.GatherTree` so the same simulator
+and the same executors apply.  Sizes are attached from the block vector
+``m``: each node's send carries its full subtree data.
+"""
+from __future__ import annotations
+
+from .treegather import Edge, GatherTree, ceil_log2
+
+
+def _attach_sizes(p: int, root: int, parent: dict[int, tuple[int, int]],
+                  m: list[int], name: str, contiguous_ranges: bool = False) -> GatherTree:
+    """parent: child -> (parent, round). Computes subtree sizes bottom-up."""
+    kids: dict[int, list[int]] = {}
+    for c, (q, _) in parent.items():
+        kids.setdefault(q, []).append(c)
+    total = list(m)
+    # accumulate in increasing round order (leaves send first, so a child's
+    # subtree total is final before it is folded into its parent)
+    for c, (q, _) in sorted(parent.items(), key=lambda kv: kv[1][1]):
+        total[q] += total[c]
+    edges = []
+    for c, (q, rnd) in parent.items():
+        lo = hi = -1
+        if contiguous_ranges:
+            sub = _subtree(c, kids)
+            s = sorted(sub)
+            if s == list(range(s[0], s[-1] + 1)):
+                lo, hi = s[0], s[-1]
+        edges.append(Edge(c, q, total[c], rnd, lo, hi))
+    t = GatherTree(p, root, edges, [], contiguous=False, name=name)
+    return t
+
+
+def _subtree(node: int, kids: dict[int, list[int]]) -> list[int]:
+    out, stack = [], [node]
+    while stack:
+        x = stack.pop()
+        out.append(x)
+        stack.extend(kids.get(x, []))
+    return out
+
+
+def binomial_tree(m: list[int], root: int) -> GatherTree:
+    """Fixed, block-size-oblivious binomial tree (classic MPI gather).
+
+    Ranks are relabelled relative to the root; in round j, every node whose
+    relative rank is an odd multiple of 2^j sends to rank - 2^j.  A node's
+    send round equals the position of its lowest set bit; sends carry the
+    node's whole (already gathered) subtree.  Worst case (paper §1): a large
+    block at the relative-rank-(p-1) node is forwarded ceil(log2 p) times.
+    """
+    return knomial_tree(m, root, 2)
+
+
+def knomial_tree(m: list[int], root: int, k: int) -> GatherTree:
+    """k-nomial tree of radix k (Intel MPI's MPI_Gatherv option 3 with k=2).
+
+    Round j: nodes whose relative rank r has digits 0 in positions < j
+    (base k) and a nonzero digit at position j send to r with that digit
+    cleared.  ceil(log_k p) rounds.
+    """
+    if k < 2:
+        raise ValueError("radix >= 2")
+    p = len(m)
+    parent: dict[int, tuple[int, int]] = {}
+    for i in range(p):
+        if i == root:
+            continue
+        rel = (i - root) % p
+        # lowest nonzero base-k digit position = send round
+        j, x = 0, rel
+        while x % k == 0:
+            x //= k
+            j += 1
+        digit = x % k
+        prel = rel - digit * (k ** j)
+        parent[i] = ((prel + root) % p, j)
+    return _attach_sizes(p, root, parent, m, name=f"{k}-nomial")
+
+
+def linear_tree(m: list[int], root: int) -> GatherTree:
+    """Direct transfers: every non-root sends straight to the root.
+
+    p-1 startups serialized on the root's receive port:
+    sum_{i != r}(alpha + beta*m_i).  This is what trivial MPI_Gatherv
+    implementations do (paper Tables: 'linear').
+    """
+    p = len(m)
+    edges = [Edge(i, root, m[i], 0, i, i) for i in range(p) if i != root]
+    return GatherTree(p, root, edges, [], contiguous=True, name="linear")
+
+
+def two_level_tree(m: list[int], root: int, node_size: int = 16) -> GatherTree:
+    """Topology-aware two-level gather (Intel MPI 'topology aware' flavor).
+
+    Processes are grouped in nodes of ``node_size`` consecutive ranks; each
+    node's leader (lowest rank, or the root in its own node) gathers its node
+    linearly, then leaders gather to the root over a binomial tree.
+    """
+    p = len(m)
+    parent: dict[int, tuple[int, int]] = {}
+    leaders = []
+    for base in range(0, p, node_size):
+        grp = list(range(base, min(base + node_size, p)))
+        leader = root if root in grp else grp[0]
+        leaders.append(leader)
+        for i in grp:
+            if i != leader:
+                parent[i] = (leader, 0)
+    # binomial across leaders, rounds offset by 1 (leaders forward after
+    # their intra-node gathers complete)
+    lroot = leaders.index(root) if root in leaders else 0
+    q = len(leaders)
+    for idx in range(q):
+        if idx == lroot:
+            continue
+        rel = (idx - lroot) % q
+        j = (rel & -rel).bit_length() - 1
+        prel = rel - (1 << j)
+        parent[leaders[idx]] = (leaders[(prel + lroot) % q], 1 + j)
+    return _attach_sizes(p, root, parent, m, name="two-level")
+
+
+def padded_sizes(m: list[int]) -> list[int]:
+    """Manual-padding transform behind Guideline (2): every block becomes
+    max_i m_i, total p * max m_i."""
+    b = max(m)
+    return [b] * len(m)

@@ -1,0 +1,149 @@
+"""Linear transmission cost model alpha + beta*m with 1-ported,
+bidirectional (telephone-like) communication — the paper's machine model.
+
+``simulate_gather`` computes the completion time of a gather tree exactly
+under this model in O(p log p): every node owns one send port and one
+receive port; a transfer of m units occupies both endpoints' respective
+ports for alpha + beta*m time; a node forwards only after its own subtree
+has fully arrived; a receiver takes ready senders first (the paper's
+non-blocking-receive behavior), or strictly in round order.
+
+Scatter is the time-reversed problem: identical completion time on the
+reversed tree, which we exploit (and property-test).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .treegather import GatherTree, ceil_log2, construction_alpha_rounds
+
+
+@dataclass(frozen=True)
+class CostParams:
+    """alpha: startup latency (us); beta: time per unit (us/unit)."""
+
+    alpha: float
+    beta: float
+
+    # calibrations (see DESIGN.md §9); units are MPI_INT-sized (4 B) to match
+    # the paper's tables.
+    @staticmethod
+    def infiniband_qdr() -> "CostParams":
+        return CostParams(alpha=1.8, beta=1.4e-3)  # ~2.9 GB/s per process pair
+
+    @staticmethod
+    def tpu_ici() -> "CostParams":
+        # ~1 us/hop, 50 GB/s/link; unit = 1 byte here
+        return CostParams(alpha=1.0, beta=1.0 / 50e3)  # us per byte*1e-6? see note
+
+
+# NOTE: for the TPU calibration, callers pass sizes in bytes and we use
+# beta = 1/50e9 seconds/byte expressed in us: 2e-5 us/KiB is awkward; the
+# roofline pipeline uses plain seconds via collective_seconds() instead.
+def collective_seconds(bytes_moved: float, link_bw: float = 50e9,
+                       hops: int = 1, alpha_s: float = 1e-6) -> float:
+    """Roofline collective term for bytes crossing one device's link."""
+    return hops * alpha_s + bytes_moved / link_bw
+
+
+def simulate_gather(tree: GatherTree, params: CostParams,
+                    skip_empty: bool = True, policy: str = "ready",
+                    include_construction: bool = False) -> float:
+    """Completion time at the root under the 1-ported telephone model.
+
+    policy='ready': receiver serves whichever child is ready first (models
+    MPI non-blocking receives; ties by round).  policy='round': strict round
+    order (models a blocking, schedule-order implementation).
+    """
+    if policy not in ("ready", "round"):
+        raise ValueError(policy)
+    a, b = params.alpha, params.beta
+    # topological processing: a node's ready time needs all children's ready
+    # times.  Children rounds < node's send round, so process edges grouped
+    # by round; compute ready[] lazily by recursion instead (iterative DFS).
+    ready: dict[int, float] = {}
+
+    order = _postorder(tree)
+    for node in order:
+        kids = tree.children_of(node)
+        arrivals = []
+        for e in kids:
+            cost = 0.0 if (e.size == 0 and skip_empty) else a + b * e.size
+            arrivals.append((ready[e.child], e.round, cost))
+        if policy == "ready":
+            arrivals.sort(key=lambda t: (t[0], t[1]))
+        else:
+            arrivals.sort(key=lambda t: (t[1], t[0]))
+        t = 0.0
+        for child_ready, _, cost in arrivals:
+            if cost == 0.0:
+                continue  # no actual communication for empty blocks
+            t = max(t, child_ready) + cost
+        ready[node] = t
+    out = ready[tree.root]
+    if include_construction:
+        out += construction_alpha_rounds(tree.p) * a
+    return out
+
+
+def simulate_scatter(tree: GatherTree, params: CostParams,
+                     skip_empty: bool = True,
+                     include_construction: bool = False) -> float:
+    """Scatter completion (last leaf served).  Time-symmetric to gather.
+
+    In scatter the root pushes data out; each node's single *send* port
+    serializes its children, and a node can forward only after it received
+    its own subtree's data.  By reversing time, this equals gather
+    completion on the same tree — we compute it directly for clarity.
+    """
+    a, b = params.alpha, params.beta
+    st = tree.reversed_for_scatter()
+    # recv_done[x]: time x has received its subtree data from its parent.
+    recv_done: dict[int, float] = {st.root: 0.0}
+    finish = 0.0
+    for node in _preorder(st):
+        base = recv_done[node]
+        kids = sorted(st.children_of(node), key=lambda e: e.round)
+        t = base
+        for e in kids:
+            cost = 0.0 if (e.size == 0 and skip_empty) else a + b * e.size
+            if cost == 0.0:
+                recv_done[e.child] = base
+                continue
+            t = t + cost
+            recv_done[e.child] = t
+            finish = max(finish, t)
+    if include_construction:
+        finish += construction_alpha_rounds(tree.p) * a
+    return finish
+
+
+def _postorder(tree: GatherTree) -> list[int]:
+    out: list[int] = []
+    stack: list[tuple[int, bool]] = [(tree.root, False)]
+    while stack:
+        node, done = stack.pop()
+        if done:
+            out.append(node)
+            continue
+        stack.append((node, True))
+        for e in tree.children_of(node):
+            stack.append((e.child, False))
+    return out
+
+
+def _preorder(tree: GatherTree) -> list[int]:
+    out, stack = [], [tree.root]
+    while stack:
+        node = stack.pop()
+        out.append(node)
+        for e in tree.children_of(node):
+            stack.append(e.child)
+    return out
+
+
+def allreduce_time(p: int, size: int, params: CostParams) -> float:
+    """Recursive-doubling allreduce of ``size`` units (G2's Allreduce(1))."""
+    if p <= 1:
+        return 0.0
+    return ceil_log2(p) * (params.alpha + params.beta * size)

@@ -1,0 +1,65 @@
+"""Self-consistent performance guidelines for irregular collectives (§4).
+
+G1:  Gather(m)  <= Gatherv(m)          (regular case m_i = m/p)
+G2:  Gatherv(m) <= Allreduce(1) + Gather(p * max_i m_i)
+
+Evaluated in the alpha-beta cost model for any gatherv algorithm; the same
+checks run against measured wall-clock times in benchmarks/jax_runtime.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from . import baselines
+from .costmodel import CostParams, allreduce_time, simulate_gather
+from .treegather import GatherTree, build_gather_tree
+
+
+@dataclass(frozen=True)
+class GuidelineReport:
+    gatherv_time: float
+    gather_regular_time: float  # binomial on the same total, regular blocks
+    padded_rhs_time: float      # Allreduce(1) + Gather(p*max m_i)
+    g1_applicable: bool
+    g1_ok: bool                 # only meaningful when g1_applicable
+    g2_ok: bool
+    slack: float = 1.0          # multiplicative slack allowed on RHS (§4)
+
+
+def regular_gather_time(p: int, per_block: int, root: int,
+                        params: CostParams) -> float:
+    """MPI_Gather reference: binomial tree on equal blocks."""
+    m = [per_block] * p
+    return simulate_gather(baselines.binomial_tree(m, root), params)
+
+
+def evaluate(m: list[int], root: int, params: CostParams,
+             gatherv_time: float | None = None, slack: float = 1.0,
+             construction: str = "overlapped") -> GuidelineReport:
+    """Check G1/G2 for the TUW gatherv (or a supplied measured time).
+
+    construction='overlapped' (our implementation: round-d data movement is
+    gated only on construction rounds <= d) or 'serial' (paper-faithful
+    worst case: full 3*ceil(log2 p)*alpha before any data moves).
+    """
+    p = len(m)
+    if gatherv_time is None:
+        tree = build_gather_tree(m, root=root)
+        if construction == "overlapped":
+            from .extensions import simulate_gather_overlapped_construction
+            gatherv_time = simulate_gather_overlapped_construction(tree, params)
+        else:
+            gatherv_time = simulate_gather(tree, params,
+                                           include_construction=True)
+    regular = all(x == m[0] for x in m)
+    g_reg = regular_gather_time(p, m[0], root, params) if regular else float("nan")
+    bmax = max(m)
+    rhs = allreduce_time(p, 1, params) + regular_gather_time(p, bmax, root, params)
+    return GuidelineReport(
+        gatherv_time=gatherv_time,
+        gather_regular_time=g_reg,
+        padded_rhs_time=rhs,
+        g1_applicable=regular,
+        g1_ok=(not regular) or g_reg <= gatherv_time * slack,
+        g2_ok=gatherv_time <= rhs * slack,
+    )

@@ -1,0 +1,353 @@
+"""TUW gatherv/scatterv as JAX collectives (shard_map + lax.ppermute).
+
+TPU adaptation of the paper's point-to-point schedules (DESIGN.md §2):
+
+* **static-irregular mode** — block sizes are known at trace time (uneven
+  parameter shards, per-expert capacities, ragged eval outputs).  The tree
+  is built on host; each of the ceil(log2 p) merge rounds becomes ONE
+  ``lax.ppermute`` whose permutation is the round's disjoint sender->
+  receiver pairs.  Payloads within a round are padded to the round's
+  largest transfer (XLA static shapes); rows are addressed with
+  device-dependent ``dynamic_slice`` starts so every device runs the same
+  SPMD program.  ``bucket_rounds`` splits a round's pairs into size buckets
+  (more ppermutes, less padding) — a beyond-paper trade-off measured in
+  benchmarks.
+
+* **runtime-ragged mode** — sizes known only at run time (MoE loads).  A
+  data-dependent communication graph is not expressible inside one XLA
+  program, so ``RaggedGathervPlanner`` quantizes sizes to buckets and
+  caches one compiled executable per bucketed size tuple (the standard
+  JAX/TPU raggedness answer).  The fully distributed Lemma-3 construction
+  itself IS expressible on device with static scalar ppermutes —
+  ``tree_metadata_exchange`` demonstrates it and is property-tested against
+  the host construction.
+
+The ordering invariant of the paper carries over: every payload is a
+consecutive rank range written at its global offset, so the root's buffer
+ends up in rank order with no reordering pass (zero-copy receives).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .treegather import GatherTree, build_gather_tree, ceil_log2
+
+
+# --------------------------------------------------------------------------
+# plan construction (host, trace time)
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class GathervPlan:
+    """Static schedule tables for the SPMD executor.
+
+    All tables are (rounds, p) int32; ``perms`` is a list of ppermute
+    permutations per round (possibly several per round when bucketed).
+    """
+
+    p: int
+    root: int
+    sizes: tuple[int, ...]
+    offsets: tuple[int, ...]       # global row offset of each block
+    total: int                     # sum(sizes)
+    cap: int                       # max(sizes): per-device input padding
+    buf_rows: int                  # total + spill padding
+    # one entry per ppermute call: (perm, payload_rows, send_start, recv_start,
+    # recv_valid) -- the *_start/_valid tables are (p,) int32
+    steps: tuple[tuple, ...]
+    tree_bytes_exact: int          # sum of true transfer sizes (paper cost)
+    tree_bytes_padded: int         # what the padded ppermutes actually move
+
+    @property
+    def padding_overhead(self) -> float:
+        if self.tree_bytes_exact == 0:
+            return 0.0
+        return self.tree_bytes_padded / self.tree_bytes_exact - 1.0
+
+
+def plan_gatherv(sizes, root: int, tree: GatherTree | None = None,
+                 bucket_rounds: int = 1) -> GathervPlan:
+    """Build the SPMD schedule for a gatherv over ``p = len(sizes)`` devices.
+
+    ``bucket_rounds > 1`` splits each merge round's pairs into up to that
+    many size buckets, each its own ppermute: extra latency, less padding.
+    """
+    sizes = tuple(int(s) for s in sizes)
+    p = len(sizes)
+    if tree is None:
+        tree = build_gather_tree(list(sizes), root=root)
+    assert tree.root == root and tree.p == p
+    offsets = tuple(int(x) for x in np.concatenate([[0], np.cumsum(sizes)[:-1]]))
+    total = int(sum(sizes))
+    cap = max(1, max(sizes))
+
+    by_round: dict[int, list] = {}
+    for e in tree.edges:
+        if e.size == 0:
+            continue  # paper: no actual communication for empty blocks
+        by_round.setdefault(e.round, []).append(e)
+
+    steps = []
+    exact = 0
+    padded = 0
+    max_payload = 1
+    for rnd in sorted(by_round):
+        edges = sorted(by_round[rnd], key=lambda e: e.size)
+        nb = min(bucket_rounds, len(edges))
+        buckets = np.array_split(np.arange(len(edges)), nb)
+        for idx in buckets:
+            group = [edges[i] for i in idx]
+            if not group:
+                continue
+            payload = max(e.size for e in group)
+            send_start = np.zeros(p, np.int32)
+            recv_start = np.zeros(p, np.int32)
+            recv_valid = np.zeros(p, np.int32)
+            perm = []
+            for e in group:
+                start = offsets[e.lo]
+                perm.append((e.child, e.parent))
+                send_start[e.child] = start
+                recv_start[e.parent] = start
+                recv_valid[e.parent] = e.size
+                exact += e.size
+                padded += payload
+            steps.append((tuple(perm), int(payload), send_start, recv_start,
+                          recv_valid))
+            max_payload = max(max_payload, payload)
+    buf_rows = total + max(cap, max_payload)
+    return GathervPlan(p, root, sizes, offsets, total, cap, buf_rows,
+                       tuple(steps), exact, padded)
+
+
+# --------------------------------------------------------------------------
+# SPMD executors (call inside shard_map)
+# --------------------------------------------------------------------------
+
+def gatherv_shard(x_local: jax.Array, plan: GathervPlan, axis_name: str) -> jax.Array:
+    """Per-shard gatherv body.  ``x_local``: (cap, F) padded local block.
+    Returns (buf_rows, F); rows [0:total] at the root hold all blocks in
+    rank order.  Call under shard_map with in/out specs P(axis_name).
+    """
+    r = jax.lax.axis_index(axis_name)
+    F = x_local.shape[1]
+    offs = jnp.asarray(plan.offsets, jnp.int32)
+    buf = jnp.zeros((plan.buf_rows, F), x_local.dtype)
+    # write own (padded) block at its global offset; spill rows are later
+    # overwritten by received ranges (see module docstring invariant)
+    buf = jax.lax.dynamic_update_slice(buf, x_local, (offs[r], jnp.int32(0)))
+    for perm, payload, send_start, recv_start, recv_valid in plan.steps:
+        s0 = jnp.asarray(send_start)[r]
+        out = jax.lax.dynamic_slice(buf, (s0, jnp.int32(0)), (payload, F))
+        got = jax.lax.ppermute(out, axis_name, perm)
+        r0 = jnp.asarray(recv_start)[r]
+        nv = jnp.asarray(recv_valid)[r]
+        cur = jax.lax.dynamic_slice(buf, (r0, jnp.int32(0)), (payload, F))
+        mask = (jnp.arange(payload, dtype=jnp.int32) < nv)[:, None]
+        upd = jnp.where(mask, got, cur)
+        buf = jax.lax.dynamic_update_slice(buf, upd, (r0, jnp.int32(0)))
+    return buf
+
+
+def scatterv_shard(buf_root: jax.Array, plan: GathervPlan, axis_name: str) -> jax.Array:
+    """Per-shard scatterv body (reverse schedule).
+
+    ``buf_root``: (buf_rows, F); only the root's rows [0:total] are read.
+    Returns the local (cap, F) block for every device.
+    """
+    r = jax.lax.axis_index(axis_name)
+    F = buf_root.shape[1]
+    offs = jnp.asarray(plan.offsets, jnp.int32)
+    buf = buf_root
+    for perm, payload, send_start, recv_start, recv_valid in reversed(plan.steps):
+        # reversed edge parent -> child, same global row range: in the gather
+        # step the child sent rows [send_start[child], +size); in scatter the
+        # parent sends those rows back down.  Host-side table transposition
+        # (trace time, cheap):
+        rperm = tuple((dst, src) for (src, dst) in perm)
+        p_send = np.zeros(plan.p, np.int32)   # parent's read offset
+        c_recv = np.zeros(plan.p, np.int32)   # child's write offset
+        c_valid = np.zeros(plan.p, np.int32)  # child's valid rows
+        for (src, dst) in perm:
+            p_send[dst] = send_start[src]
+            c_recv[src] = send_start[src]
+            c_valid[src] = recv_valid[dst]
+        s0 = jnp.asarray(p_send)[r]
+        out = jax.lax.dynamic_slice(buf, (s0, jnp.int32(0)), (payload, F))
+        got = jax.lax.ppermute(out, axis_name, rperm)
+        r0 = jnp.asarray(c_recv)[r]
+        nv = jnp.asarray(c_valid)[r]
+        cur = jax.lax.dynamic_slice(buf, (r0, jnp.int32(0)), (payload, F))
+        mask = (jnp.arange(payload, dtype=jnp.int32) < nv)[:, None]
+        upd = jnp.where(mask, got, cur)
+        buf = jax.lax.dynamic_update_slice(buf, upd, (r0, jnp.int32(0)))
+    own = jax.lax.dynamic_slice(buf, (offs[r], jnp.int32(0)),
+                                (plan.cap, F))
+    return own
+
+
+# --------------------------------------------------------------------------
+# convenience drivers
+# --------------------------------------------------------------------------
+
+def run_gatherv(mesh: Mesh, axis_name: str, blocks: list[np.ndarray],
+                root: int, bucket_rounds: int = 1):
+    """Host-facing helper: gather ragged ``blocks`` (list of (n_i, F)) to the
+    root over ``mesh[axis_name]``.  Returns (result (total, F), plan)."""
+    sizes = [int(b.shape[0]) for b in blocks]
+    F = blocks[0].shape[1]
+    plan = plan_gatherv(sizes, root, bucket_rounds=bucket_rounds)
+    x = np.zeros((plan.p, plan.cap, F), blocks[0].dtype)
+    for i, b in enumerate(blocks):
+        x[i, : sizes[i]] = b
+    x = x.reshape(plan.p * plan.cap, F)
+
+    @jax.jit
+    def run(xg):
+        return jax.shard_map(
+            lambda xl: gatherv_shard(xl, plan, axis_name),
+            mesh=mesh, in_specs=P(axis_name), out_specs=P(axis_name),
+        )(xg)
+
+    xg = jax.device_put(x, NamedSharding(mesh, P(axis_name)))
+    out = run(xg)  # (p * buf_rows, F)
+    out = np.asarray(out).reshape(plan.p, plan.buf_rows, F)
+    return out[root, : plan.total], plan
+
+
+def run_scatterv(mesh: Mesh, axis_name: str, data: np.ndarray,
+                 sizes: list[int], root: int):
+    """Scatter rank-ordered rows of ``data`` (total, F) from the root into
+    ragged per-device blocks.  Returns (list of (n_i, F), plan)."""
+    plan = plan_gatherv(sizes, root)
+    F = data.shape[1]
+    xin = np.zeros((plan.p, plan.buf_rows, F), data.dtype)
+    xin[root, : plan.total] = data
+    xin = xin.reshape(plan.p * plan.buf_rows, F)
+
+    @jax.jit
+    def run(xg):
+        return jax.shard_map(
+            lambda xl: scatterv_shard(xl, plan, axis_name),
+            mesh=mesh, in_specs=P(axis_name), out_specs=P(axis_name),
+        )(xg)
+
+    xg = jax.device_put(xin, NamedSharding(mesh, P(axis_name)))
+    out = np.asarray(run(xg)).reshape(plan.p, plan.cap, F)
+    return [out[i, : sizes[i]] for i in range(plan.p)], plan
+
+
+# --------------------------------------------------------------------------
+# in-graph Lemma-3 metadata protocol (scalar ppermutes, static perms)
+# --------------------------------------------------------------------------
+
+def tree_metadata_exchange(m_local: jax.Array, axis_name: str, p: int):
+    """Run the fully distributed construction on DEVICE with traced sizes.
+
+    The fixed-root pairing is rank-computable => ppermute perms are static;
+    only the *contents* (estimates, gather-root ids) are traced.  Returns
+    per-device (gather_root_est, gather_root_id, total) after the final
+    merge — every device learns the algorithm-chosen root and the total
+    bytes, in ceil(log2 p) scalar rounds, without any host involvement.
+
+    This demonstrates Lemma 3's distributed-ness on TPU; the data plane
+    still uses a host-built static plan (see module docstring).  Requires
+    p to be a power of two (the general-p p-1 clamping rule lives in the
+    host protocol, repro.core.distributed).
+    """
+    if p & (p - 1):
+        raise ValueError("in-graph demo requires p = 2^k; host protocol "
+                         "handles general p")
+    r = jax.lax.axis_index(axis_name)
+    est = jnp.zeros((), m_local.dtype)
+    m_groot = m_local
+    groot = r.astype(jnp.int32)
+    total = m_local
+    D = ceil_log2(p)
+    for d in range(D):
+        # cube-mirrored exchange: every member carries its cube's state, so
+        # the fixed-root pairwise exchange becomes the static permutation
+        # i <-> i ^ 2^d (each member talks to its mirror in the partner cube)
+        perm = [(i, i ^ (1 << d)) for i in range(p)]
+        o_est = jax.lax.ppermute(est, axis_name, perm)
+        o_mg = jax.lax.ppermute(m_groot, axis_name, perm)
+        o_gr = jax.lax.ppermute(groot, axis_name, perm)
+        o_tot = jax.lax.ppermute(total, axis_name, perm)
+        # decide receiver exactly like distributed._decide_lower_sends (free
+        # root rule): smaller estimate sends; ties -> smaller total sends;
+        # ties -> lower cube sends.
+        my_lower = (r & (1 << d)) == 0
+        lo_est = jnp.where(my_lower, est, o_est)
+        hi_est = jnp.where(my_lower, o_est, est)
+        lo_tot = jnp.where(my_lower, total, o_tot)
+        hi_tot = jnp.where(my_lower, o_tot, total)
+        lower_sends = jnp.where(
+            lo_est != hi_est, lo_est < hi_est,
+            jnp.where(lo_tot != hi_tot, lo_tot < hi_tot, True))
+        take_theirs = jnp.where(my_lower, lower_sends, ~lower_sends)
+        new_total = total + o_tot
+        new_groot = jnp.where(take_theirs, o_gr, groot)
+        new_mg = jnp.where(take_theirs, o_mg, m_groot)
+        est = new_total - new_mg
+        groot, m_groot, total = new_groot, new_mg, new_total
+    return est, groot, total
+
+
+# --------------------------------------------------------------------------
+# runtime-ragged planner (host-in-the-loop bucketing)
+# --------------------------------------------------------------------------
+
+class RaggedGathervPlanner:
+    """Caches compiled gatherv executables keyed by bucketed size tuples.
+
+    ``quantum`` rounds every size up to a multiple, bounding the number of
+    distinct compiled programs (standard TPU raggedness bucketing).  The
+    host-side replan is O(p log p) time and 2*ceil(log2 p)-1 message rounds
+    in the cost model — negligible next to a compile or a transfer.
+    """
+
+    def __init__(self, mesh: Mesh, axis_name: str, quantum: int = 128):
+        self.mesh = mesh
+        self.axis = axis_name
+        self.quantum = quantum
+        self._cache: dict[tuple, tuple] = {}
+
+    def bucketed(self, sizes) -> tuple[int, ...]:
+        q = self.quantum
+        return tuple(int(-(-s // q) * q) if s > 0 else 0 for s in sizes)
+
+    def gatherv(self, blocks: list[np.ndarray], root: int):
+        bsizes = self.bucketed([b.shape[0] for b in blocks])
+        key = (bsizes, root, blocks[0].shape[1], str(blocks[0].dtype))
+        if key not in self._cache:
+            plan = plan_gatherv(bsizes, root)
+            fn = jax.jit(jax.shard_map(
+                lambda xl: gatherv_shard(xl, plan, self.axis),
+                mesh=self.mesh, in_specs=P(self.axis), out_specs=P(self.axis)))
+            self._cache[key] = (plan, fn)
+        plan, fn = self._cache[key]
+        F = blocks[0].shape[1]
+        x = np.zeros((plan.p, plan.cap, F), blocks[0].dtype)
+        for i, b in enumerate(blocks):
+            x[i, : b.shape[0]] = b
+        xg = jax.device_put(x.reshape(plan.p * plan.cap, F),
+                            NamedSharding(self.mesh, P(self.axis)))
+        out = np.asarray(fn(xg)).reshape(plan.p, plan.buf_rows, F)
+        # un-bucket: slice each block back to its true size, in rank order
+        res = []
+        off = 0
+        for i, b in enumerate(blocks):
+            res.append(out[root, off: off + b.shape[0]])
+            off += bsizes[i]
+        return np.concatenate(res, axis=0), plan
+
+    @property
+    def cache_size(self) -> int:
+        return len(self._cache)

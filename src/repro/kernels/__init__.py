@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the compute hot spots (validated in
+interpret=True mode on CPU; TPU is the target):
+
+  ragged_gather   — the gatherv/MoE data plane: pack ragged blocks by a
+                    row-index map (paper §3's zero-copy consolidation)
+  flash_attention — blocked online-softmax attention (causal/SWA/GQA) for
+                    the 32k prefill cells
+  rg_lru          — blocked linear-recurrence scan (recurrentgemma)
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper), ref.py (pure-jnp oracle the tests sweep against).
+"""

@@ -1,0 +1,20 @@
+"""Jit'd flash attention wrapper (interpret on CPU, compiled on TPU)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import flash_attention_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return flash_attention_kernel(q, k, v, causal=causal, window=window,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=interpret)

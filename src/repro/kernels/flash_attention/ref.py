@@ -1,0 +1,27 @@
+"""Pure-jnp oracle: exact attention with causal / sliding-window masks and
+GQA head grouping.  Shapes: q (B,H,T,hd), k/v (B,Hkv,S,hd)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None):
+    b, h, t, hd = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, t, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgtd,bksd->bkgts", qf, kf) / jnp.sqrt(hd)
+    qi = jnp.arange(t)[:, None]
+    kj = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((t, k.shape[2]), bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= kj > qi - window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgts,bksd->bkgtd", p, vf)
+    return out.reshape(b, h, t, hd).astype(q.dtype)

@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: tiled ragged row gather out[i] = x[idx[i]].
+
+TPU adaptation of the gatherv data plane (DESIGN.md §2): instead of the
+CPU-style per-block memcpy with overlapping destination windows, the
+kernel is OUTPUT-TILE-CENTRIC — each grid step owns one (block_rows, F)
+output tile (disjoint writes, MXU/VPU-aligned), and the row-index map
+``idx`` is scalar-prefetched into SMEM so the source row of every output
+row is known before the tile executes.  x stays resident in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, x_ref, o_ref, *, block_rows: int):
+    t = pl.program_id(0)
+
+    def body(r, _):
+        src = idx_ref[t * block_rows + r]
+        src = jnp.clip(src, 0, x_ref.shape[0] - 1)
+        o_ref[pl.ds(r, 1), :] = x_ref[pl.ds(src, 1), :]
+        return 0
+
+    jax.lax.fori_loop(0, block_rows, body, 0)
+
+
+def ragged_gather_kernel(x: jax.Array, idx: jax.Array, *,
+                         block_rows: int = 128,
+                         interpret: bool = False) -> jax.Array:
+    """x: (N, F) resident rows; idx: (M,) int32 (padded to block_rows).
+    Returns (M, F) with out[i] = x[idx[i]] (idx clipped into range)."""
+    m = idx.shape[0]
+    f = x.shape[1]
+    assert m % block_rows == 0, "pad idx to a multiple of block_rows"
+    grid = (m // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_kernel, block_rows=block_rows),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,           # idx lives in SMEM
+            grid=grid,
+            # index maps receive (*grid, *scalar_prefetch_refs)
+            in_specs=[pl.BlockSpec(x.shape, lambda t, idx: (0, 0))],
+            out_specs=pl.BlockSpec((block_rows, f), lambda t, idx: (t, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, f), x.dtype),
+        interpret=interpret,
+    )(idx, x)

@@ -1,0 +1,40 @@
+"""Jit'd wrappers for the ragged gather kernel (gatherv pack / MoE
+dispatch).  interpret=True on CPU; compiled Pallas on TPU."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ragged_gather_kernel
+from .ref import build_pack_index
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def ragged_gather(x, idx, *, block_rows: int = 128, interpret: bool | None = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    pad = (-idx.shape[0]) % block_rows
+    idx_p = jnp.pad(idx, (0, pad))
+    out = ragged_gather_kernel(x, idx_p, block_rows=block_rows,
+                               interpret=interpret)
+    return out[: idx.shape[0]]
+
+
+@functools.partial(jax.jit, static_argnames=("total_pad", "block_rows",
+                                             "interpret"))
+def pack_blocks(blocks, sizes, total_pad: int, *, block_rows: int = 128,
+                interpret: bool | None = None):
+    """Pack padded (N, cap, F) blocks into (total_pad, F) rank order —
+    the paper's zero-copy send-buffer consolidation on TPU."""
+    n, cap, f = blocks.shape
+    idx = build_pack_index(sizes, cap, total_pad)
+    flat = jnp.concatenate([blocks.reshape(n * cap, f),
+                            jnp.zeros((1, f), blocks.dtype)], axis=0)
+    return ragged_gather(flat, idx, block_rows=block_rows,
+                         interpret=interpret)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the ragged row gather."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ragged_gather_ref(x: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """out[i] = x[idx[i]].  idx rows out of range read row 0 (callers use a
+    zero row-0 sentinel for padding)."""
+    safe = jnp.clip(idx, 0, x.shape[0] - 1)
+    return jnp.take(x, safe, axis=0)
+
+
+def pack_blocks_ref(blocks: jnp.ndarray, sizes: jnp.ndarray,
+                    total_pad: int) -> jnp.ndarray:
+    """Pack padded (N, cap, F) blocks into a contiguous (total_pad, F)
+    buffer in rank order (the paper's send-buffer consolidation)."""
+    n, cap, f = blocks.shape
+    idx = build_pack_index(sizes, cap, total_pad)
+    flat = blocks.reshape(n * cap, f)
+    zero = jnp.zeros((1, f), blocks.dtype)
+    src = jnp.concatenate([flat, zero], axis=0)
+    return jnp.take(src, idx, axis=0)
+
+
+def build_pack_index(sizes: jnp.ndarray, cap: int, total_pad: int):
+    """Row-index map for the pack: output row r (inside block b at offset
+    o) reads flat row b*cap + o; padding rows read the zero sentinel."""
+    n = sizes.shape[0]
+    offsets = jnp.concatenate([jnp.zeros((1,), sizes.dtype),
+                               jnp.cumsum(sizes)[:-1]])
+    r = jnp.arange(total_pad)
+    b = jnp.searchsorted(jnp.cumsum(sizes), r, side="right")
+    b = jnp.clip(b, 0, n - 1)
+    o = r - offsets[b]
+    valid = (o >= 0) & (o < sizes[b]) & (r < jnp.sum(sizes))
+    flat_idx = b * cap + o
+    sentinel = n * cap  # the appended zero row
+    return jnp.where(valid, flat_idx, sentinel).astype(jnp.int32)

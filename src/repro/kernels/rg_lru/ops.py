@@ -1,0 +1,18 @@
+"""Jit'd RG-LRU scan wrapper."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import rglru_scan_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_d", "chunk",
+                                             "interpret"))
+def rglru_scan(a, b, h0, *, block_b: int = 8, block_d: int = 128,
+               chunk: int = 256, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return rglru_scan_kernel(a, b, h0, block_b=block_b, block_d=block_d,
+                             chunk=chunk, interpret=interpret)

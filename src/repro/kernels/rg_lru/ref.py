@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the RG-LRU gated linear recurrence.
+
+h_t = a_t * h_{t-1} + b_t, elementwise over (B, T, D), h_0 given.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a, b, h0):
+    """Sequential reference.  a, b: (B,T,D) f32; h0: (B,D).  Returns
+    (h (B,T,D), h_last (B,D))."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+    import jax
+    h_last, hs = jax.lax.scan(step, h0, (a.transpose(1, 0, 2),
+                                         b.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2), h_last

@@ -1,0 +1,84 @@
+"""Sharding inference: param-name rules (FSDP + TP) with divisibility-
+checked fallbacks, and greedy auto specs for batches/caches.
+
+Layout: parameters shard tensor-parallel over 'model' and FSDP over 'data'
+(pods hold DP replicas; their gradient reduction is the 'pod' all-reduce).
+The scanned layer-stack dim is never sharded.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .mesh import dp_axes
+
+from repro.sharding_rules import param_spec_for
+
+
+def _dp_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+
+
+def param_spec(path: tuple, shape: tuple, mesh: Mesh) -> P:
+    """Infer the PartitionSpec for one parameter leaf."""
+    names = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+    sizes = {a: int(mesh.shape[a]) for a in mesh.axis_names}
+    return param_spec_for(names, shape, sizes, fsdp_axes=("data",))
+
+
+def tree_param_specs(tree, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(path, leaf.shape, mesh), tree)
+
+
+def auto_spec(shape: tuple, mesh: Mesh, batch_dim: int | None = 0) -> P:
+    """Greedy spec for data/cache arrays: batch dim over the dp axes if
+    divisible, then the largest remaining dim over 'model'."""
+    dims: list = [None] * len(shape)
+    dp = dp_axes(mesh)
+    dpsz = _dp_size(mesh)
+    if batch_dim is not None and len(shape) > batch_dim and \
+            shape[batch_dim] % dpsz == 0 and shape[batch_dim] >= dpsz:
+        dims[batch_dim] = dp if len(dp) > 1 else dp[0]
+    model = int(mesh.shape["model"])
+    cands = [d for d in range(len(shape))
+             if dims[d] is None and d != batch_dim
+             and shape[d] % model == 0 and shape[d] >= model]
+    if cands:
+        best = max(cands, key=lambda d: shape[d])
+        dims[best] = "model"
+    return P(*dims)
+
+
+def tree_auto_specs(tree, mesh: Mesh, batch_dim: int | None = 0):
+    """Specs for batch/cache trees.  Leaves under a 'body' group carry a
+    leading scanned layer-stack dim, so their batch dim shifts by one."""
+    def leaf_spec(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+        bd = batch_dim
+        if bd is not None and "body" in names:
+            bd = batch_dim + 1
+        if bd is not None and leaf.ndim <= bd:
+            bd = None
+        return auto_spec(leaf.shape, mesh, bd)
+    return jax.tree_util.tree_map_with_path(leaf_spec, tree)
+
+
+def shardings_of(spec_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def sharded_bytes(shape, dtype, spec: P, mesh: Mesh) -> int:
+    """Per-device bytes of a sharded array (for memory-plan estimates)."""
+    n = int(np.prod(shape)) if shape else 1
+    denom = 1
+    for entry in spec:
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        for a in axes:
+            denom *= mesh.shape[a]
+    return n * np.dtype(dtype).itemsize // denom

@@ -1,0 +1,227 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, no device allocation — plus the per-cell step builders the
+dry-run lowers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ArchConfig, SHAPES, ShapeConfig
+from repro.models import init_cache, init_params
+from repro.optim import AdamWConfig
+from repro.train import init_train_state, make_decode_step, \
+    make_prefill_step, make_train_step
+from .mesh import dp_axes
+from .sharding import tree_auto_specs, tree_param_specs
+
+ACT_BUDGET = 1.5e9  # per-device activation budget driving auto-microbatch
+
+
+def dryrun_config(arch: str) -> tuple[ArchConfig, AdamWConfig]:
+    from repro.configs import param_count
+    cfg = get_config(arch)
+    n = param_count(cfg)
+    opt = AdamWConfig(moment_dtype="bfloat16" if n > 20e9 else "float32")
+    return cfg, opt
+
+
+def auto_microbatches(cfg: ArchConfig, shape: ShapeConfig, mesh) -> int:
+    """Smallest power-of-two microbatch count keeping per-device scan
+    checkpoints + logits under ACT_BUDGET (EXPERIMENTS §Dry-run)."""
+    dpsz = int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+    msz = mesh.shape["model"]
+    b_loc = max(1, shape.global_batch // dpsz)
+    act_unit = cfg.n_layers * shape.seq_len * cfg.d_model * 2 / msz
+    logit_unit = shape.seq_len * (cfg.vocab / msz) * 4
+    unit = act_unit + logit_unit
+    mb = 1
+    while mb < b_loc and (b_loc / mb) * unit > ACT_BUDGET:
+        mb *= 2
+    return mb
+
+
+def batch_struct(cfg: ArchConfig, batch: int, seq: int, kind: str):
+    """Abstract input batch for one step."""
+    s = {}
+    if cfg.embed_inputs:
+        s["tokens"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    else:
+        s["embeds"] = jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                           jnp.bfloat16)
+    if cfg.n_img_tokens:
+        s["img"] = jax.ShapeDtypeStruct((batch, cfg.n_img_tokens,
+                                         cfg.d_model), jnp.bfloat16)
+    if kind == "train":
+        s["labels"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    return s
+
+
+def apply_variant(cfg: ArchConfig, variant: str, mesh) -> tuple:
+    """§Perf hillclimb variants (comma-separable).  Returns (cfg, knobs)."""
+    import dataclasses
+
+    from .mesh import dp_axes
+    knobs = {"accum_dtype": "float32", "grad_constrain": False}
+    dpsz = int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+    for v in variant.split(","):
+        if v in ("", "baseline"):
+            continue
+        elif v == "moe_local":
+            if cfg.moe is not None:
+                cfg = cfg.with_(moe=dataclasses.replace(
+                    cfg.moe, dispatch_groups=dpsz))
+        elif v == "kv_int8":
+            cfg = cfg.with_(kv_dtype="int8")
+        elif v == "accum_bf16":
+            knobs["accum_dtype"] = "bfloat16"
+        elif v == "grad_shard":
+            knobs["grad_constrain"] = True
+        elif v.startswith("mb"):
+            knobs["microbatches"] = int(v[2:])
+        elif v == "remat_dots":
+            cfg = cfg.with_(remat="dots")
+        elif v == "fsdp_gather":
+            cfg = cfg.with_(fsdp_gather=True)
+        elif v == "moe_tp_only":
+            knobs["moe_tp_only"] = True
+        elif v == "tp_only":
+            knobs["tp_only"] = True
+        else:
+            raise ValueError(f"unknown variant {v!r}")
+    return cfg, knobs
+
+
+def _drop_all_fsdp(spec_tree, template_tree, mesh):
+    """tp_only (§Perf): every PARAM leaf keeps only its TP sharding.
+    Kills all FSDP partial-sum all-reduces; costs params/model_axis bytes
+    of replicated weight memory per device (moments stay FSDP-sharded)."""
+    from .mesh import dp_axes
+    dp = set(dp_axes(mesh))
+
+    def one(spec):
+        entries = []
+        for e in spec:
+            axes = e if isinstance(e, tuple) else (e,)
+            kept = tuple(a for a in axes if a not in dp and a is not None)
+            entries.append(kept[0] if len(kept) == 1 else
+                           (kept if kept else None))
+        return jax.sharding.PartitionSpec(*entries)
+
+    return jax.tree.map(one, spec_tree,
+                        is_leaf=lambda x: isinstance(
+                            x, jax.sharding.PartitionSpec))
+
+
+def _drop_moe_fsdp(spec_tree, template_tree, mesh):
+    """moe_tp_only (§Perf): expert tensors keep only their TP sharding so
+    expert einsums contract a full (replicated) dim locally — no partial-
+    sum all-reduces.  Costs replicated-over-data expert weight memory."""
+    from .mesh import dp_axes
+    dp = set(dp_axes(mesh))
+
+    def one(path, spec, leaf):
+        names = [str(getattr(k, "key", getattr(k, "name", k)))
+                 for k in path]
+        if "ffn" not in names or leaf.ndim < 3:
+            return spec
+        entries = []
+        for e in spec:
+            axes = e if isinstance(e, tuple) else (e,)
+            kept = tuple(a for a in axes if a not in dp and a is not None)
+            entries.append(kept[0] if len(kept) == 1 else
+                           (kept if kept else None))
+        return jax.sharding.PartitionSpec(*entries)
+
+    return jax.tree_util.tree_map_with_path(
+        one, spec_tree, template_tree,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+
+def input_specs(arch: str, shape_name: str = "train_4k"):
+    """ShapeDtypeStruct stand-ins for every model input of one cell —
+    weak-type-correct, shardable, no device allocation.  For training
+    that's {tokens, labels[, embeds, img]}; serving adds the cache tree."""
+    shape = SHAPES[shape_name]
+    cfg, _ = dryrun_config(arch)
+    specs = batch_struct(cfg, shape.global_batch,
+                         shape.seq_len if shape.kind != "decode" else 1,
+                         shape.kind)
+    if shape.kind != "train":
+        specs["cache"] = jax.eval_shape(
+            lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+    return specs
+
+
+def build_cell(arch: str, shape_name: str, mesh, variant: str = "baseline"):
+    """Returns (step_fn, arg_structs, in_specs, out_specs, donate, meta)
+    for one (arch x shape) dry-run cell.  Call under jax.set_mesh(mesh)."""
+    shape = SHAPES[shape_name]
+    cfg, opt = dryrun_config(arch)
+    cfg, knobs = apply_variant(cfg, variant, mesh)
+    meta = {"arch": arch, "shape": shape_name, "kind": shape.kind,
+            "variant": variant}
+    key = jax.random.PRNGKey(0)
+
+    if shape.kind == "train":
+        mb = knobs.get("microbatches") or auto_microbatches(cfg, shape, mesh)
+        meta["microbatches"] = mb
+        gspecs = None
+        if knobs["grad_constrain"]:
+            params_s = jax.eval_shape(lambda: init_params(key, cfg))
+            gspecs = tree_param_specs(params_s, mesh)
+        step = make_train_step(cfg, opt, microbatches=mb,
+                               accum_dtype=knobs["accum_dtype"],
+                               grad_specs=gspecs)
+        state_s = jax.eval_shape(lambda: init_train_state(key, cfg, opt))
+        batch_s = batch_struct(cfg, shape.global_batch, shape.seq_len,
+                               "train")
+        p_specs = tree_param_specs(state_s.params, mesh)
+        mu_specs = tree_param_specs(state_s.opt["mu"], mesh)
+        nu_specs = tree_param_specs(state_s.opt["nu"], mesh)
+        if knobs.get("tp_only"):
+            p_specs = _drop_all_fsdp(p_specs, state_s.params, mesh)
+        elif knobs.get("moe_tp_only"):
+            # params TP-only (einsum locality); optimizer moments KEEP their
+            # FSDP sharding — they never enter an einsum, and the once-per-
+            # step reshard at the update is far cheaper than replicating
+            # 2x expert-sized moments on every device
+            p_specs = _drop_moe_fsdp(p_specs, state_s.params, mesh)
+        state_specs = type(state_s)(
+            p_specs, {"mu": mu_specs, "nu": nu_specs,
+                      "count": jax.sharding.PartitionSpec()},
+            jax.sharding.PartitionSpec())
+        batch_specs = tree_auto_specs(batch_s, mesh, batch_dim=0)
+        out_specs = (state_specs, jax.tree.map(
+            lambda l: jax.sharding.PartitionSpec(),
+            jax.eval_shape(step, state_s, batch_s)[1]))
+        return (step, (state_s, batch_s), (state_specs, batch_specs),
+                out_specs, (0,), meta)
+
+    # serving cells
+    params_s = jax.eval_shape(lambda: init_params(key, cfg))
+    p_specs = tree_param_specs(params_s, mesh)
+    cache_s = jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+    cache_specs = tree_auto_specs(cache_s, mesh, batch_dim=0)
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg)
+        batch_s = batch_struct(cfg, shape.global_batch, shape.seq_len,
+                               "prefill")
+        batch_specs = tree_auto_specs(batch_s, mesh, batch_dim=0)
+        args = (params_s, batch_s, cache_s)
+        in_specs = (p_specs, batch_specs, cache_specs)
+        logits_s, _ = jax.eval_shape(step, *args)
+        out_specs = (tree_auto_specs(logits_s, mesh, batch_dim=0),
+                     cache_specs)
+        return step, args, in_specs, out_specs, (2,), meta
+    # decode: one new token against a seq_len cache
+    step = make_decode_step(cfg)
+    batch_s = batch_struct(cfg, shape.global_batch, 1, "decode")
+    batch_specs = tree_auto_specs(batch_s, mesh, batch_dim=0)
+    args = (params_s, cache_s, batch_s)
+    in_specs = (p_specs, cache_specs, batch_specs)
+    logits_s, _ = jax.eval_shape(step, *args)
+    out_specs = (tree_auto_specs(logits_s, mesh, batch_dim=0), cache_specs)
+    return step, args, in_specs, out_specs, (1,), meta

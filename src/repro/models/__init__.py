@@ -1,0 +1,3 @@
+"""Pure-JAX model zoo (no flax): param-pytree modules assembled per
+ArchConfig, with scan-over-layer-groups for O(1)-in-depth HLO."""
+from .transformer import init_params, forward, init_cache, decode_step  # noqa: F401

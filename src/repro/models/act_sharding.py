@@ -1,0 +1,70 @@
+"""Activation sharding constraints (sequence parallelism).
+
+When a context mesh is set (jax.set_mesh in the launcher / dry-run), the
+residual stream is constrained to shard batch over the dp axes and
+sequence over 'model' at scan-layer boundaries.  This is what makes the
+126-layer 405B cell's per-layer scan checkpoints fit: B_local*S*D*2 bytes
+per layer drops by the model-axis factor; GSPMD inserts the all-gather /
+reduce-scatter pair around attention (Korthikanti et al.-style sequence
+parallelism).  No-op without a mesh (single-device tests) or when dims
+don't divide.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def residual_constraint(x):
+    """x: (B, T, D) residual stream at a layer boundary."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:  # pragma: no cover - older jax
+        return x
+    if mesh is None or not mesh.axis_names or "model" not in mesh.axis_names:
+        return x
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    dpsz = 1
+    for a in dp:
+        dpsz *= mesh.shape[a]
+    b_entry = None
+    if x.shape[0] % dpsz == 0 and x.shape[0] >= dpsz:
+        b_entry = dp if len(dp) > 1 else dp[0]
+    t_entry = None
+    msz = mesh.shape["model"]
+    if x.ndim >= 3 and x.shape[1] % msz == 0 and x.shape[1] >= msz:
+        t_entry = "model"
+    if b_entry is None and t_entry is None:
+        return x
+    spec = P(b_entry, t_entry, *([None] * (x.ndim - 2)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def unshard_fsdp(period_params):
+    """FSDP unshard-at-use hint (§Perf): constrain the current layer group's
+    weights to their TP-only sharding (FSDP axes dropped) inside the scan
+    body.  GSPMD then materializes ONE all-gather of the (small, bf16,
+    model-sharded) layer weights per layer step instead of all-reducing
+    every partial-contraction activation over the data axis — measured 47x
+    smaller per-layer collective volume on the 405B cell."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:  # pragma: no cover
+        return period_params
+    if mesh is None or not mesh.axis_names or "model" not in mesh.axis_names:
+        return period_params
+    sizes = {a: int(mesh.shape[a]) for a in mesh.axis_names}
+    from repro.sharding_rules import param_spec_for
+
+    def one(path, leaf):
+        names = [str(getattr(k, "key", getattr(k, "name", k)))
+                 for k in path]
+        # leaf is the PER-STEP slice (no leading stack dim)
+        spec = param_spec_for(names, leaf.shape, sizes, drop_fsdp=True)
+        # the barrier pins the gather INSIDE the scan body: without it XLA
+        # commutes gather(slice(i)) -> slice(gather(stack)) and LICM hoists
+        # a whole-stack all-gather out of the loop (measured: +124 GB/dev)
+        leaf = jax.lax.optimization_barrier(leaf)
+        return jax.lax.with_sharding_constraint(leaf, spec)
+
+    return jax.tree_util.tree_map_with_path(one, period_params)

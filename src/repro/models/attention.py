@@ -1,0 +1,230 @@
+"""GQA attention with causal / sliding-window masking, cross-attention for
+the VLM arch, and KV-cache decode.  Pure jnp reference path; the Pallas
+flash kernel (repro.kernels.flash_attention) is an opt-in TPU fast path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import apply_rope, trunc_normal
+
+
+def init_attention(key, d_model, n_heads, n_kv_heads, head_dim, dtype):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": trunc_normal(kq, (d_model, n_heads * head_dim), 1.0, dtype),
+        "wk": trunc_normal(kk, (d_model, n_kv_heads * head_dim), 1.0, dtype),
+        "wv": trunc_normal(kv, (d_model, n_kv_heads * head_dim), 1.0, dtype),
+        "wo": trunc_normal(ko, (n_heads * head_dim, d_model), 1.0, dtype),
+    }
+
+
+def _split_heads(x, n, hd):
+    b, t, _ = x.shape
+    return x.reshape(b, t, n, hd)
+
+
+def _sdpa(q, k, v, mask):
+    """q: (B,T,H,hd) k,v: (B,S,Hkv,hd) mask: (B,1,T,S) or None. GQA via
+    head-group einsum; softmax in f32."""
+    b, t, h, hd = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    q = q.reshape(b, t, hkv, g, hd)
+    scores = jnp.einsum("bthgd,bshd->bhgts", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    if mask is not None:
+        scores = jnp.where(mask[:, :, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgts,bshd->bthgd", probs, v)
+    return out.reshape(b, t, h * hd)
+
+
+def _sdpa_chunked(q, k, v, *, window=None, q_chunk=1024):
+    """Memory-chunked exact attention: scan over query chunks, computing a
+    full-row softmax per chunk — O(S * chunk) transient memory instead of
+    O(S^2) (the XLA-level flash-attention equivalent; the Pallas kernel is
+    the TPU-native fast path).  With a sliding window, each chunk slices
+    only the (window + chunk) keys it can see: truly sub-quadratic."""
+    b, t, h, hd = q.shape
+    nq = t // q_chunk
+    assert t % q_chunk == 0
+    qs = q.reshape(b, nq, q_chunk, h, hd).transpose(1, 0, 2, 3, 4)
+
+    use_window_slicing = (window is not None and window % q_chunk == 0
+                          and window + q_chunk <= t)
+
+    def chunk(carry, inp):
+        ci, qc = inp
+        t0 = ci * q_chunk
+        if use_window_slicing:
+            span = window + q_chunk
+            start = jnp.maximum(t0 + q_chunk - span, 0)
+            kc = jax.lax.dynamic_slice(k, (0, start, 0, 0),
+                                       (b, span, k.shape[2], hd))
+            vc = jax.lax.dynamic_slice(v, (0, start, 0, 0),
+                                       (b, span, v.shape[2], hd))
+            qi = (t0 + jnp.arange(q_chunk))[:, None]
+            kj = (start + jnp.arange(span))[None, :]
+            mask = (kj <= qi) & (kj > qi - window)
+        else:
+            kc, vc = k, v
+            qi = (t0 + jnp.arange(q_chunk))[:, None]
+            kj = jnp.arange(t)[None, :]
+            mask = kj <= qi
+            if window is not None:
+                mask &= kj > qi - window
+        out = _sdpa(qc, kc, vc, mask[None, None])
+        return carry, out
+
+    _, outs = jax.lax.scan(chunk, None, (jnp.arange(nq), qs))
+    return outs.transpose(1, 0, 2, 3).reshape(b, t, h * hd)
+
+
+def _quant_rows(x):
+    """Per-(batch,slot,head) int8 quantization of k/v rows.
+    x: (B,T,H,hd) -> (int8 rows, f32 scales (B,T,H))."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant_rows(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def causal_mask(t, s, offset=0, window=None):
+    """(t, s) boolean; query i attends keys j with j <= i+offset and, with a
+    sliding window, j > i+offset-window."""
+    qi = jnp.arange(t)[:, None] + offset
+    kj = jnp.arange(s)[None, :]
+    m = kj <= qi
+    if window is not None:
+        m &= kj > qi - window
+    return m
+
+
+def attention(p, x, *, n_heads, n_kv_heads, head_dim, rope_theta,
+              window=None, positions=None, cache=None, q_chunk=1024):
+    """Training/prefill self-attention.  x: (B,T,D).
+
+    Sequences longer than 2*q_chunk take the chunked path (O(S*chunk)
+    memory).  With ``cache`` (prefill), also writes k/v into the cache
+    using the same ring-slot layout the decode path reads (slot = pos mod
+    S), and returns (out, new_cache)."""
+    b, t, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(t, dtype=jnp.int32)[None, :]
+    q = _split_heads(x @ p["wq"].astype(x.dtype), n_heads, head_dim)
+    k = _split_heads(x @ p["wk"].astype(x.dtype), n_kv_heads, head_dim)
+    v = _split_heads(x @ p["wv"].astype(x.dtype), n_kv_heads, head_dim)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    if t > 2 * q_chunk and t % q_chunk == 0:
+        out = _sdpa_chunked(q, k, v, window=window, q_chunk=q_chunk)
+    else:
+        mask = causal_mask(t, t, 0, window)[None, None]
+        out = _sdpa(q, k, v, mask)
+    out = out @ p["wo"].astype(x.dtype)
+    if cache is None:
+        return out
+    S = cache["k"].shape[1]
+    quant = cache["k"].dtype == jnp.int8
+    if quant:
+        kd, ks = _quant_rows(k)
+        vd, vs = _quant_rows(v)
+    else:
+        kd, vd = k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
+    new = dict(cache, pos=jnp.asarray(t, jnp.int32))
+    if t >= S:  # keep the last S tokens, ring layout slot = pos mod S
+        idx = np.arange(t - S, t) % S
+        new["k"] = jnp.zeros_like(cache["k"]).at[:, idx].set(kd[:, t - S:])
+        new["v"] = jnp.zeros_like(cache["v"]).at[:, idx].set(vd[:, t - S:])
+        if quant:
+            new["k_scale"] = jnp.zeros_like(cache["k_scale"]) \
+                .at[:, idx].set(ks[:, t - S:])
+            new["v_scale"] = jnp.zeros_like(cache["v_scale"]) \
+                .at[:, idx].set(vs[:, t - S:])
+    else:
+        new["k"] = jax.lax.dynamic_update_slice(cache["k"], kd, (0, 0, 0, 0))
+        new["v"] = jax.lax.dynamic_update_slice(cache["v"], vd, (0, 0, 0, 0))
+        if quant:
+            new["k_scale"] = jax.lax.dynamic_update_slice(
+                cache["k_scale"], ks, (0, 0, 0))
+            new["v_scale"] = jax.lax.dynamic_update_slice(
+                cache["v_scale"], vs, (0, 0, 0))
+    return out, new
+
+
+def attention_decode(p, x, cache, *, n_heads, n_kv_heads, head_dim,
+                     rope_theta, window=None):
+    """Single-token decode.  x: (B,1,D); cache: dict(k,v: (B,S,Hkv,hd),
+    pos: scalar int32 count of valid entries).  Returns (out, new_cache).
+
+    For windowed/SSM archs the cache length S may be min(window, seq);
+    entries are written round-robin (rolling buffer) in that case.
+    """
+    b, t, _ = x.shape
+    assert t == 1
+    S = cache["k"].shape[1]
+    pos = cache["pos"]  # scalar: tokens already in cache
+    q = _split_heads(x @ p["wq"].astype(x.dtype), n_heads, head_dim)
+    k = _split_heads(x @ p["wk"].astype(x.dtype), n_kv_heads, head_dim)
+    v = _split_heads(x @ p["wv"].astype(x.dtype), n_kv_heads, head_dim)
+    posb = jnp.full((b, 1), pos, jnp.int32)
+    q = apply_rope(q, posb, rope_theta)
+    k = apply_rope(k, posb, rope_theta)
+    slot = jnp.mod(pos, S)  # rolling for windowed caches; S>=seq otherwise
+    quant = cache["k"].dtype == jnp.int8
+    new_scales = {}
+    if quant:
+        kq, ks = _quant_rows(k)
+        vq, vs = _quant_rows(v)
+        ck = jax.lax.dynamic_update_slice(cache["k"], kq, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], vq, (0, slot, 0, 0))
+        new_scales["k_scale"] = jax.lax.dynamic_update_slice(
+            cache["k_scale"], ks, (0, slot, 0))
+        new_scales["v_scale"] = jax.lax.dynamic_update_slice(
+            cache["v_scale"], vs, (0, slot, 0))
+    else:
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    # key j (ring slot) holds absolute position: recover validity mask
+    idx = jnp.arange(S)
+    wrap = pos + 1 - S  # first absolute pos still represented (if rolled)
+    abs_pos = jnp.where(idx <= slot, pos - slot + idx, pos - slot + idx - S)
+    valid = (abs_pos >= jnp.maximum(0, wrap)) & (abs_pos <= pos)
+    if window is not None:
+        valid &= abs_pos > pos - window
+    mask = valid[None, None, None, :]  # (1,1,1,S)
+    if quant:
+        kk = _dequant_rows(ck, new_scales["k_scale"], x.dtype)
+        vv = _dequant_rows(cv, new_scales["v_scale"], x.dtype)
+    else:
+        kk, vv = ck, cv
+    out = _sdpa(q, kk, vv, mask.astype(bool))
+    out = out @ p["wo"].astype(x.dtype)
+    return out, {"k": ck, "v": cv, "pos": pos + 1, **new_scales}
+
+
+def init_cross_attention(key, d_model, n_heads, n_kv_heads, head_dim, dtype):
+    return init_attention(key, d_model, n_heads, n_kv_heads, head_dim, dtype)
+
+
+def cross_attention(p, x, kv_src, *, n_heads, n_kv_heads, head_dim):
+    """Cross-attention over a static encoder sequence (image patches).
+    No RoPE, no causal mask (llama-3.2-vision style gated cross-attn is
+    simplified to plain cross-attn; the vision encoder itself is a stub)."""
+    b, t, _ = x.shape
+    q = _split_heads(x @ p["wq"].astype(x.dtype), n_heads, head_dim)
+    k = _split_heads(kv_src @ p["wk"].astype(kv_src.dtype), n_kv_heads, head_dim)
+    v = _split_heads(kv_src @ p["wv"].astype(kv_src.dtype), n_kv_heads, head_dim)
+    out = _sdpa(q, k, v, None)
+    return out @ p["wo"].astype(x.dtype)

@@ -1,0 +1,82 @@
+"""Shared layers: RMSNorm, RoPE, MLPs, embeddings.  Parameters are plain
+dict pytrees; every init takes an explicit PRNG key."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def trunc_normal(key, shape, scale, dtype):
+    # fan-in scaled truncated normal, the MaxText/llama default
+    std = scale / np.sqrt(shape[0] if len(shape) > 1 else 1.0)
+    return (jax.random.truncated_normal(key, -3.0, 3.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def init_linear(key, d_in, d_out, dtype, scale=1.0):
+    return {"w": trunc_normal(key, (d_in, d_out), scale, dtype)}
+
+
+def linear(p, x):
+    return x @ p["w"].astype(x.dtype)
+
+
+def init_rmsnorm(d, dtype):
+    return {"g": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * p["g"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_embedding(key, vocab, d, dtype):
+    return {"e": trunc_normal(key, (vocab, d), 1.0, dtype) * np.sqrt(vocab)}
+
+
+def embed(p, ids):
+    return jnp.take(p["e"], ids, axis=0)
+
+
+def unembed(p, x):
+    # tied or separate output head: logits in f32 for a stable softmax
+    return x.astype(jnp.float32) @ p["e"].astype(jnp.float32).T
+
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, pos, theta: float):
+    """x: (..., T, H, hd); pos: broadcastable (..., T) int32 positions."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)
+    ang = pos[..., :, None, None].astype(jnp.float32) * freqs  # (...,T,1,hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2:]
+    x32 = jnp.float32
+    out = jnp.concatenate(
+        [x1.astype(x32) * cos - x2.astype(x32) * sin,
+         x2.astype(x32) * cos + x1.astype(x32) * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def init_mlp(key, d, d_ff, dtype, act="swiglu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {"wi": trunc_normal(k1, (d, d_ff), 1.0, dtype),
+                "wg": trunc_normal(k2, (d, d_ff), 1.0, dtype),
+                "wo": trunc_normal(k3, (d_ff, d), 1.0, dtype)}
+    return {"wi": trunc_normal(k1, (d, d_ff), 1.0, dtype),
+            "wo": trunc_normal(k3, (d_ff, d), 1.0, dtype)}
+
+
+def mlp(p, x, act="swiglu"):
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["wi"].astype(x.dtype)) * (x @ p["wg"].astype(x.dtype))
+    else:
+        h = jax.nn.gelu(x @ p["wi"].astype(x.dtype))
+    return h @ p["wo"].astype(x.dtype)

@@ -1,0 +1,308 @@
+"""Model assembly: periodic block groups scanned over depth.
+
+HLO stays O(pattern length) regardless of n_layers: layers are grouped into
+``first`` (unrolled, e.g. DeepSeek's dense first layer), a scanned body of
+full periods, and an unrolled remainder.  KV/recurrent caches thread
+through the scan as stacked pytrees.
+
+Modes: ``train`` (no cache), ``prefill`` (full sequence, fills caches),
+``decode`` (one token against caches).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import attention as attn
+from . import recurrent as rec
+from .act_sharding import residual_constraint, unshard_fsdp
+from .layers import embed, init_embedding, init_mlp, init_rmsnorm, mlp, \
+    rmsnorm, unembed
+from .moe import init_moe, moe_apply
+
+
+# ------------------------------------------------------------------ params
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _dense_cfg(cfg: ArchConfig) -> ArchConfig:
+    """Config view for DeepSeek-style dense first layers (plain wide MLP)."""
+    return cfg.with_(moe=None, d_ff=cfg.d_ff if cfg.d_ff else cfg.d_model * 4)
+
+
+def _init_block(key, kind: str, cfg: ArchConfig):
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {"norm1": init_rmsnorm(d, dt)}
+    if kind in ("dense", "moe", "local", "cross"):
+        p["attn"] = attn.init_attention(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                        cfg.hd, dt)
+        p["norm2"] = init_rmsnorm(d, dt)
+        if kind == "moe":
+            p["ffn"] = init_moe(ks[1], d, cfg.moe, dt)
+        else:
+            p["ffn"] = init_mlp(ks[1], d, cfg.d_ff, dt, cfg.act)
+        if kind == "cross":
+            p["xattn"] = attn.init_cross_attention(ks[2], d, cfg.n_heads,
+                                                   cfg.n_kv_heads, cfg.hd, dt)
+            p["norm3"] = init_rmsnorm(d, dt)
+    elif kind == "rglru":
+        p["rec"] = rec.init_rglru(ks[0], d, dt)
+        p["norm2"] = init_rmsnorm(d, dt)
+        p["ffn"] = init_mlp(ks[1], d, cfg.d_ff, dt, cfg.act)
+    elif kind == "mlstm":
+        p["rec"] = rec.init_mlstm(ks[0], d, cfg.n_heads, dt)
+    elif kind == "slstm":
+        p["rec"] = rec.init_slstm(ks[0], d, cfg.n_heads, dt)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def layer_plan(cfg: ArchConfig) -> tuple[list[str], int, list[str]]:
+    """(unrolled first kinds, n scanned periods, unrolled tail kinds)."""
+    first = ["dense"] * (cfg.moe.first_dense if cfg.moe else 0)
+    rest = cfg.n_layers - len(first)
+    period = len(cfg.pattern)
+    n_periods = rest // period
+    tail = list(cfg.pattern[: rest - n_periods * period])
+    return first, n_periods, tail
+
+
+def init_params(key, cfg: ArchConfig):
+    first, n_periods, tail = layer_plan(cfg)
+    ke, kf, kb, kt = jax.random.split(key, 4)
+    params = {"embed": init_embedding(ke, cfg.vocab, cfg.d_model, _dtype(cfg)),
+              "final_norm": init_rmsnorm(cfg.d_model, _dtype(cfg))}
+    params["first"] = [
+        _init_block(jax.random.fold_in(kf, i), k, _dense_cfg(cfg))
+        for i, k in enumerate(first)]
+    if n_periods:
+        def one_period(k):
+            kk = jax.random.split(k, len(cfg.pattern))
+            return [_init_block(kk[j], kind, cfg)
+                    for j, kind in enumerate(cfg.pattern)]
+        params["body"] = jax.vmap(one_period)(jax.random.split(kb, n_periods))
+    params["tail"] = [
+        _init_block(jax.random.fold_in(kt, i), k, cfg)
+        for i, k in enumerate(tail)]
+    return params
+
+
+# ------------------------------------------------------------------ blocks
+
+def _apply_block(p, kind: str, cfg: ArchConfig, x, *, img=None,
+                 cache=None, mode: str = "train"):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(p["norm1"], x)
+    new_cache = cache
+    if kind in ("dense", "moe", "local", "cross"):
+        window = cfg.local_window if kind == "local" else cfg.window
+        kw = dict(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                  head_dim=cfg.hd, rope_theta=cfg.rope_theta, window=window)
+        if mode == "decode":
+            a, kv = attn.attention_decode(p["attn"], h, cache["kv"], **kw)
+            new_cache = dict(cache, kv=kv)
+        elif mode == "prefill":
+            a, kv = attn.attention(p["attn"], h, cache=cache["kv"], **kw)
+            new_cache = dict(cache, kv=kv)
+        else:
+            a = attn.attention(p["attn"], h, **kw)
+        x = x + a
+        if kind == "cross":
+            hx = rmsnorm(p["norm3"], x)
+            x = x + attn.cross_attention(p["xattn"], hx, img,
+                                         n_heads=cfg.n_heads,
+                                         n_kv_heads=cfg.n_kv_heads,
+                                         head_dim=cfg.hd)
+        h2 = rmsnorm(p["norm2"], x)
+        if kind == "moe":
+            f, moe_aux = moe_apply(p["ffn"], h2, cfg.moe)
+            aux = aux + moe_aux["balance_loss"]
+        else:
+            f = mlp(p["ffn"], h2, cfg.act)
+        x = x + f
+    elif kind in ("rglru", "mlstm", "slstm"):
+        st_in = cache["rec"] if mode == "decode" else None
+        if kind == "rglru":
+            r, st = rec.rglru_block(p["rec"], h, st_in)
+        elif kind == "mlstm":
+            r, st = rec.mlstm_block(p["rec"], h, cfg.n_heads, st_in,
+                                    want_state=(mode == "prefill"))
+        else:
+            r, st = rec.slstm_block(p["rec"], h, cfg.n_heads, st_in)
+        if mode in ("decode", "prefill") and st is not None:
+            new_cache = dict(cache, rec=st)
+        x = x + r
+        if kind == "rglru":
+            h2 = rmsnorm(p["norm2"], x)
+            x = x + mlp(p["ffn"], h2, cfg.act)
+    else:
+        raise ValueError(kind)
+    return x, new_cache, aux
+
+
+def _remat(fn, cfg: ArchConfig):
+    if cfg.remat == "none":
+        return fn
+    policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+              if cfg.remat == "dots" else None)
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _first_kinds(cfg: ArchConfig) -> list[str]:
+    return ["dense"] * (cfg.moe.first_dense if cfg.moe else 0)
+
+
+# ---------------------------------------------------------- full sequence
+
+def forward(params, cfg: ArchConfig, tokens=None, embeds=None, img=None,
+            cache=None, logits_last_only: bool = False):
+    """Full-sequence forward.  mode=train if cache is None else prefill.
+    ``logits_last_only`` slices the residual stream to the final position
+    BEFORE the unembed — prefill only needs next-token logits, and a full
+    (B, 32k, V) f32 logits tensor is by far the largest buffer otherwise.
+    Returns (logits, aux) or (logits, aux, new_cache)."""
+    mode = "train" if cache is None else "prefill"
+    x = embed(params["embed"], tokens) if cfg.embed_inputs else embeds
+    aux_total = jnp.zeros((), jnp.float32)
+    first, n_periods, tail = layer_plan(cfg)
+
+    new_cache = {"first": [], "tail": []} if cache is not None else None
+    for i, kind in enumerate(_first_kinds(cfg)):
+        c = cache["first"][i] if cache else None
+        x, c2, aux = _apply_block(params["first"][i], kind, _dense_cfg(cfg),
+                                  x, img=img, cache=c, mode=mode)
+        aux_total += aux
+        if cache is not None:
+            new_cache["first"].append(c2)
+
+    if n_periods:
+        if cache is None:
+            def period_body(carry, period_params):
+                x, auxc = carry
+                x = residual_constraint(x)  # seq-parallel scan checkpoints
+                if cfg.fsdp_gather:         # unshard-at-use hint (§Perf)
+                    period_params = unshard_fsdp(period_params)
+                for j, kind in enumerate(cfg.pattern):
+                    x, _, aux = _apply_block(period_params[j], kind, cfg, x,
+                                             img=img, mode="train")
+                    auxc += aux
+                # constrain the carry too: the SAVED per-layer checkpoint is
+                # this output, so seq-sharding must hold here to shrink it
+                x = residual_constraint(x)
+                return (x, auxc), None
+            body = _remat(period_body, cfg)
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total),
+                                             params["body"])
+        else:
+            def period_body(carry, scanned):
+                x, auxc = carry
+                period_params, period_cache = scanned
+                outs = []
+                for j, kind in enumerate(cfg.pattern):
+                    x, c2, aux = _apply_block(period_params[j], kind, cfg, x,
+                                              img=img, cache=period_cache[j],
+                                              mode="prefill")
+                    auxc += aux
+                    outs.append(c2)
+                return (x, auxc), outs
+            (x, aux_total), body_cache = jax.lax.scan(
+                period_body, (x, aux_total), (params["body"], cache["body"]))
+            new_cache["body"] = body_cache
+
+    for i, kind in enumerate(tail):
+        c = cache["tail"][i] if cache else None
+        x, c2, aux = _apply_block(params["tail"][i], kind, cfg, x, img=img,
+                                  cache=c, mode=mode)
+        aux_total += aux
+        if cache is not None:
+            new_cache["tail"].append(c2)
+
+    if logits_last_only:
+        x = x[:, -1:]
+    x = rmsnorm(params["final_norm"], x)
+    logits = unembed(params["embed"], x)
+    if cache is None:
+        return logits, aux_total
+    return logits, aux_total, new_cache
+
+
+# ------------------------------------------------------------------ decode
+
+def _block_cache(kind: str, cfg: ArchConfig, batch: int, seq_len: int):
+    dt = _dtype(cfg)
+    if kind in ("dense", "moe", "cross"):
+        S = min(seq_len, cfg.window) if cfg.window else seq_len
+    elif kind == "local":
+        S = min(seq_len, cfg.local_window or seq_len)
+    elif kind == "rglru":
+        return {"rec": rec.rglru_init_state(batch, cfg.d_model, dt)}
+    elif kind == "mlstm":
+        return {"rec": rec.mlstm_init_state(batch, cfg.d_model, cfg.n_heads,
+                                            dt)}
+    elif kind == "slstm":
+        return {"rec": rec.slstm_init_state(batch, cfg.d_model)}
+    else:
+        raise ValueError(kind)
+    if cfg.kv_dtype == "int8":  # quantized cache (§Perf): 2x smaller + scales
+        kv = {"k": jnp.zeros((batch, S, cfg.n_kv_heads, cfg.hd), jnp.int8),
+              "v": jnp.zeros((batch, S, cfg.n_kv_heads, cfg.hd), jnp.int8),
+              "k_scale": jnp.zeros((batch, S, cfg.n_kv_heads), jnp.float32),
+              "v_scale": jnp.zeros((batch, S, cfg.n_kv_heads), jnp.float32),
+              "pos": jnp.zeros((), jnp.int32)}
+    else:
+        kv = {"k": jnp.zeros((batch, S, cfg.n_kv_heads, cfg.hd), dt),
+              "v": jnp.zeros((batch, S, cfg.n_kv_heads, cfg.hd), dt),
+              "pos": jnp.zeros((), jnp.int32)}
+    return {"kv": kv}
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int):
+    """Decode caches for every layer, grouped like the params."""
+    first, n_periods, tail = layer_plan(cfg)
+    cache = {"first": [_block_cache("dense", cfg, batch, seq_len)
+                       for _ in first],
+             "tail": [_block_cache(k, cfg, batch, seq_len) for k in tail]}
+    if n_periods:
+        def one(_):
+            return [_block_cache(k, cfg, batch, seq_len) for k in cfg.pattern]
+        cache["body"] = jax.vmap(one)(jnp.arange(n_periods))
+    return cache
+
+
+def decode_step(params, cfg: ArchConfig, cache, token=None, embeds=None,
+                img=None):
+    """One decode step.  token: (B,1) int32 (or embeds (B,1,D)).
+    Returns (logits (B,1,V), new_cache)."""
+    x = embed(params["embed"], token) if cfg.embed_inputs else embeds
+    first, n_periods, tail = layer_plan(cfg)
+    new_cache = {"first": [], "tail": []}
+    for i, kind in enumerate(_first_kinds(cfg)):
+        x, c, _ = _apply_block(params["first"][i], kind, _dense_cfg(cfg), x,
+                               img=img, cache=cache["first"][i], mode="decode")
+        new_cache["first"].append(c)
+    if n_periods:
+        def period_body(x, scanned):
+            period_params, period_cache = scanned
+            new_pc = []
+            for j, kind in enumerate(cfg.pattern):
+                x, c, _ = _apply_block(period_params[j], kind, cfg, x,
+                                       img=img, cache=period_cache[j],
+                                       mode="decode")
+                new_pc.append(c)
+            return x, new_pc
+        x, body_cache = jax.lax.scan(period_body, x,
+                                     (params["body"], cache["body"]))
+        new_cache["body"] = body_cache
+    for i, kind in enumerate(tail):
+        x, c, _ = _apply_block(params["tail"][i], kind, cfg, x, img=img,
+                               cache=cache["tail"][i], mode="decode")
+        new_cache["tail"].append(c)
+    x = rmsnorm(params["final_norm"], x)
+    return unembed(params["embed"], x), new_cache

@@ -1,0 +1,3 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update, global_norm  # noqa: F401
+from .schedule import cosine_warmup  # noqa: F401
+from .compression import compress_error_feedback, decompress  # noqa: F401

@@ -1,0 +1,68 @@
+"""AdamW with configurable moment dtypes (bf16 moments are what lets the
+405B cell fit 16 GB/chip — EXPERIMENTS.md §Dry-run) and global-norm clip.
+Pure pytree transforms; optimizer state sharding (ZeRO-1/3) comes from the
+out_shardings the launcher assigns, not from this module.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"   # bf16 halves optimizer memory
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)  # noqa: E731
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig, lr_scale=1.0):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    count = state["count"] + 1
+    c1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    dt = jnp.dtype(cfg.moment_dtype)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32) * scale
+        mu32 = cfg.b1 * mu.astype(jnp.float32) + (1 - cfg.b1) * g32
+        nu32 = cfg.b2 * nu.astype(jnp.float32) + (1 - cfg.b2) * g32 * g32
+        step = (mu32 / c1) / (jnp.sqrt(nu32 / c2) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (step + cfg.weight_decay * p32)
+        return p32.astype(p.dtype), mu32.astype(dt), nu32.astype(dt)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in
+           zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "count": count}, {
+        "grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}

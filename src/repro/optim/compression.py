@@ -1,0 +1,37 @@
+"""Error-feedback int8 gradient compression (opt-in DP-axis trick).
+
+Quantize each gradient leaf to int8 with a per-leaf scale before the
+data-parallel reduction; the residual is carried to the next step
+(error feedback keeps convergence).  4x fewer bytes on the DP all-reduce —
+measured in EXPERIMENTS §Perf on the collective roofline term.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_error_feedback(grads, residual):
+    """Returns (int8_grads, scales, new_residual)."""
+    if residual is None:
+        residual = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        new_r = g32 - q.astype(jnp.float32) * scale
+        return q, scale, new_r
+
+    flat, tdef = jax.tree.flatten(grads)
+    rflat = jax.tree.leaves(residual)
+    out = [one(g, r) for g, r in zip(flat, rflat)]
+    q = jax.tree.unflatten(tdef, [o[0] for o in out])
+    s = jax.tree.unflatten(tdef, [o[1] for o in out])
+    nr = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return q, s, nr
+
+
+def decompress(q, scales, dtype=jnp.float32):
+    return jax.tree.map(
+        lambda qq, ss: qq.astype(jnp.float32) * ss, q, scales)

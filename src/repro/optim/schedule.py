@@ -1,0 +1,14 @@
+"""LR schedules (scalar-in, scalar-out; jit-friendly)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_warmup(step, *, warmup: int, total: int, floor: float = 0.1):
+    """Linear warmup then cosine decay to ``floor`` of peak (scale factor)."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = (step + 1.0) / jnp.maximum(1.0, warmup)  # nonzero lr at step 0
+    prog = (step - warmup) / jnp.maximum(1.0, total - warmup)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = floor + (1.0 - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, cos)

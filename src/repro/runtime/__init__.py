@@ -1,0 +1,2 @@
+from .restart import TrainLoop, SimulatedFailure  # noqa: F401
+from .straggler import StragglerPolicy  # noqa: F401

@@ -1,0 +1,47 @@
+"""Straggler mitigation policy.
+
+At 1000+ nodes, a single slow host stalls every synchronous collective.
+The policy here is the standard deadline scheme: track a robust moving
+step-time estimate; when a step exceeds ``factor`` x median, record a
+straggle event and recommend an action:
+
+  * 'warn'     — below the eviction threshold: keep going, tag the host
+  * 'backup'   — schedule the straggler's data shard redundantly on the
+                 spare host pool next step (speculative execution)
+  * 'evict'    — repeated breaches: drop the host, shrink the mesh
+                 (elastic restart path, see launch/train.py --hosts)
+
+This container has one host, so the policy's *decisions* are what tests
+exercise; the actions map to the elastic restore in checkpoint/store.py.
+"""
+from __future__ import annotations
+
+import statistics
+from dataclasses import dataclass, field
+
+
+@dataclass
+class StragglerPolicy:
+    factor: float = 3.0
+    evict_after: int = 3
+    window: int = 32
+    times: list = field(default_factory=list)
+    events: list = field(default_factory=list)
+    breaches: int = 0
+
+    def observe(self, step: int, dt: float) -> str:
+        self.times.append(dt)
+        if len(self.times) > self.window:
+            self.times.pop(0)
+        if len(self.times) < 5:
+            return "ok"
+        med = statistics.median(self.times[:-1])
+        if dt > self.factor * med:
+            self.breaches += 1
+            action = ("evict" if self.breaches >= self.evict_after
+                      else "backup" if self.breaches > 1 else "warn")
+            self.events.append({"step": step, "dt": dt, "median": med,
+                                "action": action})
+            return action
+        self.breaches = max(0, self.breaches - 1)
+        return "ok"

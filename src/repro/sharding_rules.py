@@ -1,0 +1,74 @@
+"""Parameter sharding rules shared by the launcher (in/out shardings) and
+the in-model FSDP unshard hint (models/act_sharding.py).  Name-based
+FSDP+TP assignment with divisibility-checked fallbacks."""
+from __future__ import annotations
+
+from jax.sharding import PartitionSpec as P
+
+# param name -> (tp_dim, fsdp_dim) on the UNSTACKED tensor, negative = from
+# the end.  None entries mean "no preference".
+RULES = {
+    "e": (0, 1),           # embedding (V, D): vocab-parallel, FSDP on D
+    "wq": (-1, 0), "wk": (-1, 0), "wv": (-1, 0),
+    "wi": (-1, 0), "wg": (-1, 0), "wx": (-1, 0), "wa": (-1, 0),
+    "router": (None, 0),
+    "wo": (0, -1),
+    "wf": (None, 0),
+    "conv": (-1, None), "lam": (None, None), "g": (None, None),
+    "rh": (-1, 1),
+}
+MOE_STACK = {"wi", "wg", "wo"}
+
+
+def param_spec_for(names: list, shape: tuple, axis_sizes: dict,
+                   fsdp_axes: tuple = ("data",), drop_fsdp: bool = False) -> P:
+    """Infer the PartitionSpec for one parameter leaf.
+
+    ``names``: the pytree path keys as strings (last one is the param name).
+    ``axis_sizes``: mesh axis name -> size.  ``drop_fsdp=True`` returns the
+    spec with the FSDP axes removed (the unshard-at-use/FSDP-gather hint).
+    """
+    name = names[-1]
+    in_body = "body" in names
+    in_moe = "ffn" in names and len(shape) - (1 if in_body else 0) == 3
+    dims: list = [None] * len(shape)
+    off = 1 if in_body else 0  # leading scanned layer dim stays unsharded
+    model = axis_sizes.get("model", 1)
+    fsdp = fsdp_axes[0] if len(fsdp_axes) == 1 else tuple(fsdp_axes)
+    fsdp_size = 1
+    for a in fsdp_axes:
+        fsdp_size *= axis_sizes.get(a, 1)
+
+    def try_set(dim, axis, size):
+        if dim is None:
+            return False
+        d = dim if dim >= 0 else len(shape) + dim
+        if d < off or d >= len(shape):
+            return False
+        if dims[d] is None and shape[d] % size == 0 and shape[d] >= size:
+            dims[d] = axis
+            return True
+        return False
+
+    if in_moe and name in MOE_STACK:
+        # (E, D, F) or (E, F, D) (+ optional stack dim)
+        if not try_set(off + 0, "model", model):   # expert-parallel
+            try_set(-1 if name != "wo" else off + 1, "model", model)
+        if not drop_fsdp:
+            try_set(off + 1 if name != "wo" else -1, fsdp, fsdp_size)
+        return P(*dims)
+
+    tp_dim, fsdp_dim = RULES.get(name, (None, None))
+    ok_tp = try_set(tp_dim if tp_dim is None or tp_dim >= 0
+                    else len(shape) + tp_dim, "model", model)
+    if not ok_tp and tp_dim is not None:
+        for d in range(len(shape) - 1, off - 1, -1):
+            if try_set(d, "model", model):
+                break
+    if fsdp_dim is not None and not drop_fsdp:
+        if not try_set(fsdp_dim if fsdp_dim >= 0 else len(shape) + fsdp_dim,
+                       fsdp, fsdp_size):
+            for d in range(off, len(shape)):
+                if try_set(d, fsdp, fsdp_size):
+                    break
+    return P(*dims)

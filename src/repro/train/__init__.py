@@ -1,0 +1,4 @@
+from .steps import (  # noqa: F401
+    TrainState, loss_fn, make_train_step, make_prefill_step,
+    make_decode_step, init_train_state,
+)

@@ -1,0 +1,26 @@
+"""Test configuration.
+
+IMPORTANT: XLA_FLAGS / device-count forcing is NEVER set here (the spec:
+smoke tests and benches must see 1 device).  Multi-device tests run child
+scripts in subprocesses that set XLA_FLAGS themselves (tests/multidevice/).
+"""
+import os
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+
+def subprocess_env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+@pytest.fixture(scope="session")
+def child_env():
+    return subprocess_env()

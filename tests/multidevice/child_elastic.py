@@ -1,0 +1,44 @@
+"""Elastic checkpoint restore across mesh shapes (8 host devices):
+save a train state sharded on a (4,2) mesh, restore it onto (2,4) and
+(8,1) meshes, verify values and the new shardings — the node-failure /
+cluster-resize path of the runtime."""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import tempfile
+
+import numpy as np
+
+import jax
+
+from repro.checkpoint import latest_step, restore, save
+from repro.configs import get_config
+from repro.launch.sharding import shardings_of, tree_param_specs
+from repro.optim import AdamWConfig
+from repro.train import init_train_state
+
+cfg = get_config("granite-3-2b").reduced()
+opt = AdamWConfig()
+state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+
+with tempfile.TemporaryDirectory() as d:
+    save(state.params, 11, d)
+    assert latest_step(d) == 11
+    for shape in [(2, 4), (8, 1)]:
+        mesh = jax.make_mesh(shape, ("data", "model"))
+        specs = tree_param_specs(state.params, mesh)
+        sh = shardings_of(specs, mesh)
+        restored, manifest = restore(
+            state.params, 11, d, shardings=sh)
+        for a, b in zip(jax.tree.leaves(state.params),
+                        jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        n_sharded = sum(
+            1 for leaf in jax.tree.leaves(restored)
+            if len(leaf.sharding.device_set) > 1)
+        print(f"elastic restore onto mesh{shape}: values equal, "
+              f"{n_sharded} leaves sharded across devices")
+        assert n_sharded > 0
+
+print("ALL ELASTIC-RESTORE CHECKS PASSED")

@@ -1,0 +1,142 @@
+"""Cost-model behaviour the paper argues from: worst cases of the standard
+algorithms, guideline fulfillment, and the extension wins."""
+import math
+
+import pytest
+
+from repro.core import (
+    CostParams, allreduce_time, baselines, build_gather_tree, ceil_log2,
+    simulate_gather,
+)
+from repro.core import extensions as ext
+from repro.core.distributions import NAMES, block_sizes
+from repro.core.guidelines import evaluate, regular_gather_time
+
+P = CostParams(alpha=2.0, beta=0.01)
+
+
+def test_binomial_worst_case_forwards_large_block_log_times():
+    """Paper §1: choose m_i = 0 except one farthest-away processor; the fixed
+    binomial tree pays ceil(log2 p) * beta * M."""
+    p, M = 64, 100_000
+    root = 0
+    m = [0] * p
+    m[p - 1] = M  # relative rank p-1: farthest from the root
+    t = baselines.binomial_tree(m, root)
+    sim = simulate_gather(t, P, skip_empty=True)
+    d = ceil_log2(p)
+    assert sim >= d * (P.beta * M)  # the block crosses d hops
+    tuw = simulate_gather(build_gather_tree(m, root=root), P,
+                          include_construction=True)
+    assert tuw <= 3 * d * P.alpha + P.beta * M + P.beta * M  # linear
+    assert tuw < sim / 3  # decisively better in the regime the paper targets
+
+
+def test_linear_pays_p_startups():
+    p = 256
+    m = [1] * p
+    t = baselines.linear_tree(m, 0)
+    sim = simulate_gather(t, P)
+    assert sim >= (p - 1) * P.alpha
+    tuw = simulate_gather(build_gather_tree(m, root=0), P,
+                          include_construction=True)
+    assert tuw < sim / 5
+
+
+def test_knomial_radix_reduces_rounds():
+    m = [10] * 81
+    r2 = baselines.knomial_tree(m, 0, 2)
+    r3 = baselines.knomial_tree(m, 0, 3)
+    assert r3.rounds < r2.rounds
+    r2.validate_structure = None  # structural validation: spanning
+    assert len(r2.edges) == len(m) - 1 and len(r3.edges) == len(m) - 1
+
+
+def test_two_level_tree_valid():
+    m = list(range(1, 65))
+    t = baselines.two_level_tree(m, root=17, node_size=16)
+    assert len(t.edges) == len(m) - 1
+    # every non-root sends once; no cycles (walk up)
+    par = {e.child: e.parent for e in t.edges}
+    for i in range(len(m)):
+        x, seen = i, set()
+        while x != 17:
+            assert x not in seen
+            seen.add(x)
+            x = par[x]
+
+
+@pytest.mark.parametrize("name", [n for n in NAMES if n != "same"])
+@pytest.mark.parametrize("b", [1, 100, 10_000])
+def test_guideline2_fulfilled_on_irregular_distributions(name, b):
+    """The paper's central experimental claim, in the model: TUW_Gatherv
+    fulfills G2 on the irregular distributions (Tables 1-6)."""
+    p = 120
+    m = block_sizes(name, p, b, seed=11)
+    rep = evaluate(m, root=p // 2, params=P)
+    assert rep.g2_ok, (name, b, rep)
+
+
+def test_guideline2_same_regular_case():
+    """Regular 'same' case (the paper calls it 'particularly interesting'):
+    with overlapped construction G2 holds outright; the paper-faithful
+    serial-construction variant needs the slack §4 explicitly allows
+    (model-inherent (D-1)*alpha construction gap vs a D*alpha allreduce)."""
+    p, b = 120, 100
+    m = block_sizes("same", p, b)
+    assert evaluate(m, root=p // 2, params=P).g2_ok
+    rep_serial = evaluate(m, root=p // 2, params=P, construction="serial")
+    assert not rep_serial.g2_ok  # documents the serial-model gap...
+    assert evaluate(m, root=p // 2, params=P, slack=1.25,
+                    construction="serial").g2_ok  # ...covered by §4 slack
+
+
+def test_guideline1_regular_gather_not_worse():
+    """G1: Gather(m) <= Gatherv(m) for the TUW implementation."""
+    p, b = 96, 500
+    m = [b] * p
+    gv = simulate_gather(build_gather_tree(m, root=3), P,
+                         include_construction=True)
+    g = regular_gather_time(p, b, 3, P)
+    assert g <= gv + 1e-9
+
+
+def test_degradation_reduces_total_bytes_on_spikes():
+    m = block_sizes("spikes", 113, 10_000, seed=5)
+    r = 56
+    base = build_gather_tree(m, root=r)
+    deg = build_gather_tree(m, root=r,
+                            degrade_threshold=ext.auto_threshold(m, P) + max(m))
+    assert deg.total_bytes_moved() < base.total_bytes_moved()
+    # and with 2 root ports the byte saving becomes a time saving
+    t_base = ext.simulate_gather_kported(base, P, 2)
+    t_deg = ext.simulate_gather_kported(deg, P, 2)
+    assert t_deg <= t_base + 1e-9
+
+
+def test_kported_reduces_rounds_and_time():
+    m = block_sizes("random", 200, 100, seed=3)
+    t1 = ext.build_kported_tree(m, 1, root=77)
+    t3 = ext.build_kported_tree(m, 3, root=77)
+    t1.validate(m)
+    t3.validate(m)
+    assert t3.rounds <= math.ceil(math.log(200, 4)) + 1
+    assert (ext.simulate_gather_kported(t3, P, 3)
+            < ext.simulate_gather_kported(t1, P, 1))
+
+
+def test_segmentation_attacks_fixed_root_penalty():
+    """Construct a delayed-cube case: one huge late block; streaming lets the
+    root overlap the drain with the cube's completion."""
+    p = 64
+    m = [1] * p
+    m[33] = 500_000  # huge block far from root 0, deep in the other subcube
+    t = build_gather_tree(m, root=0)
+    plain = simulate_gather(t, P)
+    seg = ext.simulate_gather_segmented(t, m, P, segment=4096)
+    assert seg <= plain + 1e-9
+
+
+def test_allreduce_time_monotone():
+    assert allreduce_time(1, 1, P) == 0.0
+    assert allreduce_time(64, 1, P) < allreduce_time(128, 1, P)

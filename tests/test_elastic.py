@@ -1,0 +1,17 @@
+"""Elastic restore (mesh-resize) in a subprocess with 8 host devices."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+CHILD = os.path.join(os.path.dirname(__file__), "multidevice",
+                     "child_elastic.py")
+
+
+@pytest.mark.slow
+def test_elastic_restore_across_meshes(child_env):
+    res = subprocess.run([sys.executable, CHILD], env=child_env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+    assert "ALL ELASTIC-RESTORE CHECKS PASSED" in res.stdout

@@ -1,0 +1,76 @@
+"""JAX collective layer tests.
+
+Single-device invariants run inline; everything needing >1 device runs the
+child script in a subprocess with its own XLA_FLAGS (see conftest notes).
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build_gather_tree
+from repro.core.jax_collectives import plan_gatherv
+from repro.core.distributions import NAMES, block_sizes
+
+CHILD = os.path.join(os.path.dirname(__file__), "multidevice",
+                     "child_collectives.py")
+
+
+# ------------------------------------------------------------ plan invariants
+
+@given(st.lists(st.integers(min_value=0, max_value=500), min_size=2,
+                max_size=64),
+       st.integers(min_value=0, max_value=63),
+       st.integers(min_value=1, max_value=4))
+@settings(max_examples=80, deadline=None)
+def test_plan_tables_consistent(sizes, root_idx, buckets):
+    root = root_idx % len(sizes)
+    plan = plan_gatherv(sizes, root, bucket_rounds=buckets)
+    assert plan.total == sum(sizes)
+    assert plan.tree_bytes_exact <= plan.tree_bytes_padded
+    # exact bytes equal the tree's moved bytes (paper's linear cost)
+    tree = build_gather_tree(list(sizes), root=root)
+    assert plan.tree_bytes_exact == tree.total_bytes_moved()
+    seen_pairs = set()
+    for perm, payload, send_start, recv_start, recv_valid in plan.steps:
+        assert payload >= 1
+        for (s, d) in perm:
+            assert (s, d) not in seen_pairs  # each edge sent exactly once
+            seen_pairs.add((s, d))
+            assert 0 <= send_start[s] <= plan.total
+            assert recv_valid[d] <= payload
+        # ppermute legality: unique sources, unique destinations per step
+        srcs = [s for s, _ in perm]
+        dsts = [d for _, d in perm]
+        assert len(set(srcs)) == len(srcs)
+        assert len(set(dsts)) == len(dsts)
+    assert len(seen_pairs) == sum(1 for e in tree.edges if e.size > 0)
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_bucketing_never_increases_padded_bytes(name):
+    sizes = block_sizes(name, 64, 1000, seed=2)
+    p1 = plan_gatherv(sizes, 11, bucket_rounds=1)
+    p4 = plan_gatherv(sizes, 11, bucket_rounds=4)
+    assert p4.tree_bytes_padded <= p1.tree_bytes_padded
+    assert p4.tree_bytes_exact == p1.tree_bytes_exact
+
+
+def test_padding_overhead_reported():
+    sizes = block_sizes("spikes", 64, 1000, seed=2)
+    plan = plan_gatherv(sizes, 11)
+    assert plan.padding_overhead >= 0.0
+
+
+# ------------------------------------------------------- multi-device child
+
+@pytest.mark.slow
+def test_multidevice_collectives(child_env):
+    res = subprocess.run(
+        [sys.executable, CHILD], env=child_env, capture_output=True,
+        text=True, timeout=600)
+    assert res.returncode == 0, f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+    assert "ALL MULTIDEVICE COLLECTIVE CHECKS PASSED" in res.stdout

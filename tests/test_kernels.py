@@ -1,0 +1,130 @@
+"""Per-kernel validation (deliverable c): interpret=True Pallas execution
+vs the pure-jnp ref.py oracle, swept over shapes/dtypes + hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ragged_gather.ops import pack_blocks, ragged_gather
+from repro.kernels.ragged_gather.ref import pack_blocks_ref, ragged_gather_ref
+from repro.kernels.rg_lru.ops import rglru_scan
+from repro.kernels.rg_lru.ref import rglru_scan_ref
+
+RNG = np.random.default_rng(0)
+
+
+# ------------------------------------------------------------ ragged gather
+
+@pytest.mark.parametrize("dtype", [np.float32, np.int32, np.float16])
+@pytest.mark.parametrize("n,f,m,br", [(64, 8, 128, 32), (300, 16, 500, 128),
+                                      (128, 128, 128, 128)])
+def test_ragged_gather_sweep(dtype, n, f, m, br):
+    x = jnp.asarray(RNG.standard_normal((n, f)) * 10, dtype)
+    idx = jnp.asarray(RNG.integers(0, n, m), jnp.int32)
+    got = ragged_gather(x, idx, block_rows=br, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ragged_gather_ref(x, idx)))
+
+
+@given(st.integers(min_value=1, max_value=6),
+       st.integers(min_value=1, max_value=24),
+       st.integers(min_value=1, max_value=7),
+       st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=20, deadline=None)
+def test_pack_blocks_property(n, cap, f, seed):
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(0, cap + 1, n).astype(np.int32)
+    blocks = rng.standard_normal((n, cap, f)).astype(np.float32)
+    total_pad = int(sizes.sum()) + int(rng.integers(0, 8))
+    total_pad = max(total_pad, 1)
+    got = pack_blocks(jnp.asarray(blocks), jnp.asarray(sizes), total_pad,
+                      block_rows=32, interpret=True)
+    want = pack_blocks_ref(jnp.asarray(blocks), jnp.asarray(sizes), total_pad)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+    # rank-order invariant: valid rows are the concatenation of blocks
+    off = 0
+    for i in range(n):
+        np.testing.assert_allclose(np.asarray(got)[off: off + sizes[i]],
+                                   blocks[i, : sizes[i]])
+        off += sizes[i]
+
+
+# ---------------------------------------------------------- flash attention
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,h,hkv,t,hd,causal,window,bq,bk",
+    [
+        (2, 4, 2, 256, 64, True, None, 128, 128),
+        (1, 4, 1, 256, 64, True, 128, 64, 64),    # MQA + sliding window
+        (1, 2, 2, 384, 32, False, None, 128, 128),
+        (1, 8, 2, 128, 128, True, None, 128, 128),  # GQA group 4
+        (2, 2, 1, 512, 64, True, 256, 128, 128),
+    ])
+def test_flash_attention_sweep(dtype, b, h, hkv, t, hd, causal, window,
+                               bq, bk):
+    q = jnp.asarray(RNG.standard_normal((b, h, t, hd)), dtype)
+    k = jnp.asarray(RNG.standard_normal((b, hkv, t, hd)), dtype)
+    v = jnp.asarray(RNG.standard_normal((b, hkv, t, hd)), dtype)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=bq, block_k=bk, interpret=True)
+    want = attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@given(st.integers(min_value=1, max_value=3),
+       st.sampled_from([1, 2, 4]),
+       st.sampled_from([64, 128]),
+       st.sampled_from([32, 64]),
+       st.integers(min_value=0, max_value=1000))
+@settings(max_examples=12, deadline=None)
+def test_flash_attention_property(b, g, t, hd, seed):
+    rng = np.random.default_rng(seed)
+    hkv = 2
+    h = hkv * g
+    q = jnp.asarray(rng.standard_normal((b, h, t, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, hkv, t, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, hkv, t, hd)), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, block_q=32, block_k=32,
+                          interpret=True)
+    want = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+# ----------------------------------------------------------------- rg_lru
+
+@pytest.mark.parametrize("B,T,D,bb,bd,ch", [(8, 512, 256, 8, 128, 128),
+                                            (16, 256, 128, 8, 128, 64),
+                                            (8, 1024, 384, 4, 128, 256)])
+def test_rglru_scan_sweep(B, T, D, bb, bd, ch):
+    a = jnp.asarray(RNG.uniform(0.5, 1.0, (B, T, D)), jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((B, T, D)) * 0.1, jnp.float32)
+    h0 = jnp.asarray(RNG.standard_normal((B, D)), jnp.float32)
+    h, hl = rglru_scan(a, b, h0, block_b=bb, block_d=bd, chunk=ch,
+                       interpret=True)
+    hr, hlr = rglru_scan_ref(a, b, h0)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hl), np.asarray(hlr),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(min_value=0, max_value=1000))
+@settings(max_examples=10, deadline=None)
+def test_rglru_scan_property(seed):
+    rng = np.random.default_rng(seed)
+    B, T, D = 8, 128, 128
+    a = jnp.asarray(rng.uniform(0.0, 1.0, (B, T, D)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((B, T, D)), jnp.float32)
+    h0 = jnp.asarray(rng.standard_normal((B, D)), jnp.float32)
+    h, hl = rglru_scan(a, b, h0, chunk=32, interpret=True)
+    hr, hlr = rglru_scan_ref(a, b, h0)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
+                               rtol=1e-5, atol=1e-5)

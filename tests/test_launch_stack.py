@@ -1,0 +1,17 @@
+"""Dry-run plumbing on a real (small) mesh, in a subprocess."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+CHILD = os.path.join(os.path.dirname(__file__), "multidevice",
+                     "child_launch.py")
+
+
+@pytest.mark.slow
+def test_launch_stack_small_mesh(child_env):
+    res = subprocess.run([sys.executable, CHILD], env=child_env,
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+    assert "ALL LAUNCH-STACK CHECKS PASSED" in res.stdout

@@ -1,0 +1,126 @@
+"""§Perf feature correctness: grouped MoE dispatch, int8 KV cache,
+variant plumbing, sharding rules."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import decode_step, forward, init_cache, init_params
+from repro.models.moe import moe_apply
+from repro.sharding_rules import param_spec_for
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_moe_grouped_equals_global():
+    cfg = get_config("mixtral-8x7b").reduced()
+    moe = dataclasses.replace(cfg.moe, capacity_factor=8.0)
+    params = init_params(KEY, cfg.with_(moe=moe))
+    mp = jax.tree.map(lambda a: a[0], params["body"][0]["ffn"])
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32, cfg.d_model),
+                          jnp.float32)
+    o1, a1 = moe_apply(mp, x, moe)
+    o2, a2 = moe_apply(mp, x, dataclasses.replace(moe, dispatch_groups=4))
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_array_equal(np.asarray(a1["load"]),
+                                  np.asarray(a2["load"]))
+
+
+def test_moe_grouped_with_shared_experts():
+    cfg = get_config("deepseek-moe-16b").reduced()
+    moe = dataclasses.replace(cfg.moe, capacity_factor=8.0)
+    params = init_params(KEY, cfg.with_(moe=moe))
+    mp = jax.tree.map(lambda a: a[0], params["body"][0]["ffn"])
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 16, cfg.d_model),
+                          jnp.float32)
+    o1, _ = moe_apply(mp, x, moe)
+    o2, _ = moe_apply(mp, x, dataclasses.replace(moe, dispatch_groups=2))
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "granite-3-2b"])
+def test_int8_kv_decode_close_to_forward(arch):
+    """Dense archs only: MoE routers sit near decision boundaries at random
+    init, so int8 cache noise flips expert choices (discrete divergence) —
+    quantized-cache serving for MoE needs a trained router to evaluate."""
+    cfg = get_config(arch).reduced().with_(kv_dtype="int8")
+    params = init_params(KEY, cfg)
+    B, T = 2, 8
+    toks = jax.random.randint(KEY, (B, T), 0, cfg.vocab)
+    ref, _ = forward(params, cfg, tokens=toks)
+    cache = init_cache(cfg, B, T)
+    assert cache["body"][0]["kv"]["k"].dtype == jnp.int8
+    outs = []
+    for t in range(T):
+        lg, cache = decode_step(params, cfg, cache, token=toks[:, t: t + 1])
+        outs.append(lg)
+    got = jnp.concatenate(outs, axis=1)
+    rel = float(jnp.max(jnp.abs(got - ref))) / float(jnp.max(jnp.abs(ref)))
+    assert rel < 0.05, rel
+
+
+def test_int8_kv_prefill_then_decode():
+    cfg = get_config("yi-6b").reduced().with_(kv_dtype="int8")
+    params = init_params(KEY, cfg)
+    B, T, K = 1, 8, 3
+    toks = jax.random.randint(KEY, (B, T + K), 0, cfg.vocab)
+    ref, _ = forward(params, cfg, tokens=toks)
+    cache = init_cache(cfg, B, T + K)
+    _, _, cache = forward(params, cfg, tokens=toks[:, :T], cache=cache)
+    for t in range(T, T + K):
+        lg, cache = decode_step(params, cfg, cache, token=toks[:, t: t + 1])
+        rel = (float(jnp.max(jnp.abs(lg[:, 0] - ref[:, t])))
+               / float(jnp.max(jnp.abs(ref))))
+        assert rel < 0.05, (t, rel)
+
+
+# --------------------------------------------------------- sharding rules
+
+def _sizes():
+    return {"data": 16, "model": 16}
+
+
+def test_param_spec_rules():
+    # embedding: vocab-parallel + FSDP on d
+    s = param_spec_for(["embed", "e"], (128256, 16384), _sizes())
+    assert s == jax.sharding.PartitionSpec("model", "data")
+    # indivisible vocab falls back: model on d
+    s = param_spec_for(["embed", "e"], (49155, 2048), _sizes())
+    assert s[0] is None and "model" in tuple(s)
+    # stacked attention weight: layer dim never sharded
+    s = param_spec_for(["body", "attn", "wq"], (126, 16384, 16384), _sizes())
+    assert s[0] is None and s[2] == "model"
+    # drop_fsdp removes the data axis only
+    s = param_spec_for(["body", "attn", "wq"], (126, 16384, 16384),
+                       _sizes(), drop_fsdp=True)
+    assert "data" not in tuple(s) and "model" in tuple(s)
+    # MoE experts: EP when divisible (deepseek: 64 experts / 16)
+    s = param_spec_for(["body", "ffn", "wi"], (27, 64, 2048, 1408), _sizes())
+    assert s[1] == "model"
+    # MoE experts: TP fallback when not (mixtral: 8 experts)
+    s = param_spec_for(["body", "ffn", "wi"], (32, 8, 4096, 14336), _sizes())
+    assert s[1] != "model" and "model" in tuple(s)
+
+
+def test_variant_parsing():
+    from repro.launch.mesh import make_production_mesh  # noqa: F401
+    # pure-python check of the variant grammar (no devices needed)
+    from repro.launch.specs import apply_variant
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+    cfg = get_config("mixtral-8x7b")
+    c2, knobs = apply_variant(cfg, "moe_local,kv_int8,accum_bf16,mb4",
+                              FakeMesh())
+    assert c2.moe.dispatch_groups == 16
+    assert c2.kv_dtype == "int8"
+    assert knobs["accum_dtype"] == "bfloat16"
+    assert knobs["microbatches"] == 4
+    with pytest.raises(ValueError):
+        apply_variant(cfg, "bogus", FakeMesh())
