@@ -18,7 +18,7 @@ import numpy as np
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.distributions import NAMES, block_sizes
-from repro.core.jax_collectives import gatherv_shard, plan_gatherv
+from repro.core.jax_collectives import gatherv_shard, plan_gatherv, shard_map
 
 mesh = jax.make_mesh((8,), ("x",))
 out = {}
@@ -26,7 +26,7 @@ for name in NAMES:
     for b in (64, 1024):
         sizes = block_sizes(name, 8, b, seed=3)
         plan = plan_gatherv(sizes, 3)
-        fn = jax.jit(jax.shard_map(lambda xl: gatherv_shard(xl, plan, "x"),
+        fn = jax.jit(shard_map(lambda xl: gatherv_shard(xl, plan, "x"),
                                    mesh=mesh, in_specs=P("x"),
                                    out_specs=P("x")))
         x = jax.device_put(np.random.randn(plan.p * plan.cap, 16)
@@ -41,7 +41,7 @@ for name in NAMES:
 
         # padded all-gather alternative (Guideline 2 RHS on-device)
         cap = plan.cap
-        ag = jax.jit(jax.shard_map(
+        ag = jax.jit(shard_map(
             lambda xl: jax.lax.all_gather(xl, "x"),
             mesh=mesh, in_specs=P("x"), out_specs=P("x")))
         ag(x).block_until_ready()

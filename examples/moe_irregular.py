@@ -1,9 +1,16 @@
 """The paper's technique inside the model: irregular MoE expert loads.
 
 Routes a real batch through the reduced Mixtral router, takes the
-per-expert load histogram (the m_i of the paper), and runs the TUW
-gatherv over 8 host devices to pack per-expert token blocks to the expert
-owner — comparing moved bytes against the padded all-gather alternative.
+per-expert load histogram (the m_i of the paper), and runs BOTH MoE
+communication phases over 8 host devices:
+
+* **dispatch** — tokens travel from their data shard to their expert's
+  owner device through the composed TUW ``alltoallv`` (8 rooted scatter
+  trees packed into permutation rounds);
+* **combine** — per-expert token blocks gather back to the coordinator
+  with the TUW gatherv tree;
+
+comparing moved bytes against the padded regular alternatives.
 
 Run WITHOUT setting XLA_FLAGS yourself — the script forces 8 host devices
 for the shard_map demo:
@@ -19,7 +26,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core.jax_collectives import run_gatherv
+from repro.core.composed import independent_scatter_bytes
+from repro.core.jax_collectives import run_alltoallv, run_gatherv
 from repro.models import init_params
 from repro.models.moe import moe_apply
 
@@ -30,15 +38,43 @@ x = jax.random.normal(jax.random.PRNGKey(1), (4, 64, cfg.d_model),
 moe_p = jax.tree.map(lambda a: a[0], params["body"][0]["ffn"])
 _, aux = moe_apply(moe_p, x, cfg.moe)
 loads = np.asarray(aux["load"])
+E = cfg.moe.n_experts
 print(f"routed {4 * 64} tokens x top-{cfg.moe.top_k} over "
-      f"{cfg.moe.n_experts} experts; loads = {loads.tolist()} "
+      f"{E} experts; loads = {loads.tolist()} "
       f"(dropped {int(aux['dropped'])})")
 
-# 8-device layout: EP=4 experts x DP=2 token shards — each device holds
-# the (ragged) half-shard of one expert's tokens; gather all of them to
-# the expert-parallel coordinator with the TUW tree over a real mesh
 mesh = jax.make_mesh((8,), ("x",))
 rng = np.random.default_rng(0)
+
+# ---------------------------------------------------------------- dispatch
+# 8-device layout: device j owns expert j (the reduced config has E=4
+# experts, so devices E..7 own none — their columns are zero, exercising
+# the scheduler's sparsity path); each device starts holding the slice of
+# every expert's tokens that was routed FROM its data shard — an 8x8
+# irregular size matrix S[i][j] = tokens of expert j sitting on shard i.
+S = np.zeros((8, 8), np.int64)
+for j, l in enumerate(loads[:8]):
+    base, rem = divmod(int(l), 8)
+    S[:, j] = base
+    S[:rem, j] += 1
+blocks = [[rng.standard_normal((int(S[i, j]), cfg.d_model)).astype(np.float32)
+           for j in range(8)] for i in range(8)]
+recv, plan = run_alltoallv(mesh, "x", blocks)
+for j in range(8):
+    want = np.concatenate([blocks[i][j] for i in range(8)],
+                          axis=0).reshape(-1, cfg.d_model)
+    np.testing.assert_allclose(recv[j], want)
+pred = independent_scatter_bytes(S)
+print(f"TUW alltoallv dispatch over mesh{mesh.shape}: OK, "
+      f"{plan.tree_bytes_exact} rows moved in {plan.num_rounds} rounds "
+      f"(cost model predicted {pred}, padded {plan.tree_bytes_padded})")
+pad_rows = 8 * 7 * int(S.max())  # regular alltoall: every block max-padded
+print(f"padded all-to-all alternative: {pad_rows} rows "
+      f"({pad_rows / max(plan.tree_bytes_padded, 1):.1f}x more)")
+
+# ----------------------------------------------------------------- combine
+# expert outputs return to the expert-parallel coordinator: EP=4 experts x
+# DP=2 token shards; gather all ragged half-shards with the TUW tree
 shard_sizes = []
 for l in loads:
     shard_sizes += [int(l) // 2, int(l) - int(l) // 2]
@@ -47,7 +83,7 @@ blocks = [rng.standard_normal((s, cfg.d_model)).astype(np.float32)
 got, plan = run_gatherv(mesh, "x", blocks, root=0)
 want = np.concatenate(blocks, axis=0)
 np.testing.assert_allclose(got, want)
-print(f"TUW gatherv over mesh{mesh.shape}: OK, "
+print(f"TUW gatherv combine over mesh{mesh.shape}: OK, "
       f"{plan.tree_bytes_exact} rows moved (padded {plan.tree_bytes_padded})")
 pad_rows = 8 * 7 * max(int(l) for l in loads)
 print(f"padded all-gather alternative: {pad_rows} rows "

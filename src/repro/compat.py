@@ -1,0 +1,22 @@
+"""Aliases for jax APIs that moved between the versions we support.
+
+Import from here instead of patching per-module: ``shard_map`` (top-level
+in new jax, experimental in 0.4.x) and ``pallas_tpu_compiler_params``
+(``pltpu.CompilerParams``, formerly ``TPUCompilerParams``).
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.5 exposes shard_map at top level
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def pallas_tpu_compiler_params(**kwargs):
+    """Build pltpu CompilerParams under either jax naming."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)

@@ -2,8 +2,9 @@
 
 Centralized reference (Lemmas 1-2), fully distributed protocol (Lemma 3),
 alpha-beta cost model, baselines the paper compares against, performance
-guidelines (G1/G2), beyond-paper extensions, and the JAX shard_map
-collectives built on the trees.
+guidelines (G1/G2 and their composed G3/G4 analogues), beyond-paper
+extensions, composed irregular collectives (allgatherv/alltoallv built
+from the rooted trees), and the JAX shard_map collectives.
 """
 from .treegather import (  # noqa: F401
     Edge, GatherTree, Merge, build_gather_tree, ceil_log2,
@@ -13,6 +14,11 @@ from .distributed import (  # noqa: F401
     Plan, ProtocolStats, assemble_tree, build_gather_tree_distributed,
 )
 from .costmodel import (  # noqa: F401
-    CostParams, allreduce_time, simulate_gather, simulate_scatter,
+    CostParams, allgatherv_time, allreduce_time, alltoallv_time,
+    simulate_composed, simulate_gather, simulate_scatter,
+)
+from .composed import (  # noqa: F401
+    ComposedSchedule, Transfer, allgatherv_schedule, alltoallv_schedule,
+    independent_scatter_bytes,
 )
 from . import baselines, distributions, guidelines  # noqa: F401

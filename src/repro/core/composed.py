@@ -1,0 +1,268 @@
+"""Composed irregular collectives on TUW trees (beyond-paper layer).
+
+The paper's rooted gather/scatter trees are the building blocks MPI uses
+to compose richer irregular collectives (cf. Träff, arXiv:1711.08731;
+NVIDIA PAT, arXiv:2506.20252).  This module composes them on host into
+round-synchronous schedules that the JAX layer lowers 1:1 to
+``lax.ppermute`` permutations (see ``repro.core.jax_collectives``):
+
+* **allgatherv** — gatherv into the *algorithm-chosen* root (Lemma 1: no
+  waiting penalty), then a broadcast of the packed rank-ordered buffer
+  down ``GatherTree.reversed_for_scatter()``.  Cost is the Theorem 1
+  gather term ``d*alpha + beta*(sum m - m_r)`` plus ``<= d`` broadcast
+  rounds of the full buffer.
+
+* **alltoallv** — one rooted scatter tree per source rank ``r`` (sizes =
+  row ``r`` of the size matrix, root fixed at ``r``, Lemma 2), their
+  rounds packed greedily round-robin into *global* rounds with unique
+  sources and unique destinations — i.e. every global round is a partial
+  permutation, directly expressible as one ``ppermute``.
+
+Both schedules inherit the paper's ordering invariant: every transfer
+carries a consecutive block-rank range and is written at the *same* flat
+row offset it was read from (zero-copy receives, no reordering pass).
+The flat coordinate space concatenates the per-tree row spaces:
+``row_starts[r] + offsets(r)[k]`` is where block ``k`` of tree ``r``
+lives on every device that holds it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .treegather import GatherTree, build_gather_tree
+
+
+@dataclass(frozen=True)
+class Transfer:
+    """One scheduled point-to-point move inside a global round.
+
+    ``start`` is the flat row offset of the carried range — identical on
+    the sender and the receiver (the zero-copy invariant).  ``tree`` is
+    the owning scatter/gather tree id (source rank for alltoallv, 0 for
+    allgatherv); ``lo..hi`` the consecutive block-rank range carried.
+    """
+
+    src: int
+    dst: int
+    size: int
+    start: int
+    tree: int
+    lo: int
+    hi: int
+
+
+@dataclass
+class ComposedSchedule:
+    """Round-synchronous schedule: each round is a partial permutation.
+
+    ``sizes`` is an (ntrees, p) int array — one row per scatter/gather
+    tree (p rows for alltoallv, 1 for allgatherv).
+    """
+
+    kind: str                      # "allgatherv" | "alltoallv"
+    p: int
+    root: int                      # allgatherv gather root; -1 for alltoallv
+    sizes: np.ndarray              # (ntrees, p) block sizes
+    row_starts: np.ndarray         # (ntrees,) flat start of each row space
+    rounds: list[list[Transfer]] = field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        self._offs: dict[int, np.ndarray] = {}
+
+    def offsets(self, tree: int) -> np.ndarray:
+        """Block offsets within tree ``tree``'s row space (cached cumsum)."""
+        if tree not in self._offs:
+            row = self.sizes[tree]
+            self._offs[tree] = np.concatenate(
+                [[0], np.cumsum(row[:-1])]).astype(np.int64)
+        return self._offs[tree]
+
+    def flat_offset(self, tree: int, block: int) -> int:
+        return int(self.row_starts[tree] + self.offsets(tree)[block])
+
+    @property
+    def total_rows(self) -> int:
+        return int(self.row_starts[-1] + self.sizes[-1].sum())
+
+    @property
+    def bytes_exact(self) -> int:
+        return sum(t.size for rnd in self.rounds for t in rnd)
+
+    @property
+    def num_rounds(self) -> int:
+        return len(self.rounds)
+
+    # ------------------------------------------------------------- checking
+
+    def validate(self) -> None:
+        """Structural invariants; raises AssertionError on violation."""
+        for rnd in self.rounds:
+            srcs = [t.src for t in rnd]
+            dsts = [t.dst for t in rnd]
+            assert len(set(srcs)) == len(srcs), "round has a double sender"
+            assert len(set(dsts)) == len(dsts), "round has a double receiver"
+            for t in rnd:
+                assert 0 <= t.src < self.p and 0 <= t.dst < self.p
+                assert t.src != t.dst and t.size > 0
+                assert 0 <= t.lo <= t.hi < self.p
+                assert t.start == self.flat_offset(t.tree, t.lo), (
+                    "zero-copy invariant: send offset == global block offset")
+                assert t.size == int(self.sizes[t.tree][t.lo: t.hi + 1].sum()), (
+                    "transfer carries exactly its consecutive block range")
+
+    def simulate_dataflow(self) -> dict[tuple[int, int], set[int]]:
+        """Execute the schedule symbolically; verify data availability.
+
+        Returns coverage ``(device, tree) -> set of block ranks held``.
+        Raises AssertionError if any transfer forwards blocks its sender
+        has not yet received (dependency violation) — receives within a
+        round see sender state from the round start (ppermute semantics).
+        """
+        cov: dict[tuple[int, int], set[int]] = {}
+        if self.kind == "allgatherv":
+            for i in range(self.p):
+                cov[(i, 0)] = {i}
+        else:
+            for r in range(self.sizes.shape[0]):
+                cov[(r, r)] = set(range(self.p))
+        for rnd in self.rounds:
+            adds = []
+            for t in rnd:
+                need = {b for b in range(t.lo, t.hi + 1)
+                        if self.sizes[t.tree][b] > 0}
+                have = cov.get((t.src, t.tree), set())
+                assert need <= have, (
+                    f"transfer {t} forwards blocks {need - have} the sender "
+                    "has not received yet")
+                adds.append(((t.dst, t.tree), need))
+            for key, need in adds:
+                cov.setdefault(key, set()).update(need)
+        return cov
+
+
+# --------------------------------------------------------------------------
+# schedule construction
+# --------------------------------------------------------------------------
+
+def _tree_rounds(tree: GatherTree, skip_empty: bool = True):
+    """Edges grouped by round, empty transfers (and then empty rounds)
+    dropped — safe because a zero-size subtree contains only zero-size
+    descendants (paper: no communication for empty blocks)."""
+    by: dict[int, list] = {}
+    for e in tree.edges:
+        if skip_empty and e.size == 0:
+            continue
+        by.setdefault(e.round, []).append(e)
+    return [by[k] for k in sorted(by)]
+
+
+def allgatherv_schedule(m, root: int | None = None) -> ComposedSchedule:
+    """allgatherv = gatherv (free or fixed root) + broadcast of the packed
+    buffer down the reversed tree.  Every device ends with all blocks in
+    rank order at their global offsets."""
+    m = [int(x) for x in m]
+    if any(x < 0 for x in m):
+        raise ValueError("block sizes must be non-negative")
+    p = len(m)
+    tree = build_gather_tree(m, root=root)
+    total = sum(m)
+    sched = ComposedSchedule("allgatherv", p, tree.root,
+                             np.asarray([m], np.int64),
+                             np.zeros(1, np.int64))
+    offs = sched.offsets(0)
+    for edges in _tree_rounds(tree):
+        sched.rounds.append([
+            Transfer(e.child, e.parent, e.size, int(offs[e.lo]), 0, e.lo, e.hi)
+            for e in edges
+        ])
+    if total > 0 and p > 1:
+        # broadcast phase: every edge of the reversed tree carries the FULL
+        # packed buffer (all p blocks) from offset 0 — still one consecutive
+        # rank range, so the invariant machinery applies unchanged.
+        for edges in _tree_rounds(tree.reversed_for_scatter(),
+                                  skip_empty=False):
+            sched.rounds.append([
+                Transfer(e.parent, e.child, total, 0, 0, 0, p - 1)
+                for e in edges
+            ])
+    return sched
+
+
+def alltoallv_schedule(size_matrix) -> ComposedSchedule:
+    """alltoallv = p rooted scatter trees packed round-robin.
+
+    Tree ``r`` scatters row ``r`` of the size matrix from fixed root ``r``
+    (Lemma 2).  A greedy round-robin list scheduler packs the trees' local
+    rounds into global rounds: a tree's next round joins the current
+    global round iff its senders and receivers are disjoint from those
+    already packed — so every global round is a partial permutation
+    (ppermute-legal).  Per-tree round order is preserved, which respects
+    all data dependencies (scatter rounds increase root-to-leaf).
+
+    Rows whose off-diagonal entries are all zero need no tree at all, so
+    the scheduler is linear in *active* rows (sparse MoE-style matrices
+    at large p stay cheap).
+    """
+    S = np.asarray(size_matrix, dtype=np.int64)
+    if S.ndim != 2 or S.shape[0] != S.shape[1]:
+        raise ValueError("size matrix must be p x p")
+    if (S < 0).any():
+        raise ValueError("block sizes must be non-negative")
+    p = S.shape[0]
+    row_sums = S.sum(axis=1)
+    row_starts = np.concatenate([[0], np.cumsum(row_sums)[:-1]]).astype(np.int64)
+    sched = ComposedSchedule("alltoallv", p, -1, S, row_starts)
+    active = [int(r) for r in np.nonzero(row_sums - np.diag(S) > 0)[0]]
+    tree_rounds = {
+        r: _tree_rounds(
+            build_gather_tree(S[r].tolist(), root=r).reversed_for_scatter())
+        for r in active
+    }
+    nxt = {r: 0 for r in active}
+    g = 0
+    while any(nxt[r] < len(tree_rounds[r]) for r in active):
+        # a global round must be a partial permutation: sources unique AND
+        # destinations unique (a device may send one and receive one — the
+        # 1-ported telephone model and lax.ppermute both allow it)
+        used_src: set[int] = set()
+        used_dst: set[int] = set()
+        cur: list[Transfer] = []
+        for k in range(len(active)):
+            r = active[(g + k) % len(active)]
+            i = nxt[r]
+            if i >= len(tree_rounds[r]):
+                continue
+            edges = tree_rounds[r][i]
+            srcs = {e.parent for e in edges}   # scatter: parent sends
+            dsts = {e.child for e in edges}
+            if (srcs & used_src) or (dsts & used_dst):
+                continue  # conflicts with this global round; retry next one
+            used_src |= srcs
+            used_dst |= dsts
+            offs = sched.offsets(r)
+            cur.extend(
+                Transfer(e.parent, e.child, e.size,
+                         int(row_starts[r] + offs[e.lo]), r, e.lo, e.hi)
+                for e in edges
+            )
+            nxt[r] += 1
+        # progress guarantee: the first eligible tree always fits an empty
+        # round, so cur is never empty here
+        sched.rounds.append(cur)
+        g += 1
+    return sched
+
+
+def independent_scatter_bytes(size_matrix) -> int:
+    """Reference byte count: p independent ``build_gather_tree`` scatters,
+    one per row (what the composed schedule must match exactly)."""
+    S = np.asarray(size_matrix, dtype=np.int64)
+    total = 0
+    for r in range(S.shape[0]):
+        row = S[r]
+        if int(row.sum() - row[r]) > 0:
+            total += build_gather_tree(row.tolist(),
+                                       root=r).total_bytes_moved()
+    return total

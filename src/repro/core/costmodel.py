@@ -147,3 +147,35 @@ def allreduce_time(p: int, size: int, params: CostParams) -> float:
     if p <= 1:
         return 0.0
     return ceil_log2(p) * (params.alpha + params.beta * size)
+
+
+# --------------------------------------------------------------------------
+# composed collectives (repro.core.composed): round-synchronous predictor
+# --------------------------------------------------------------------------
+
+def simulate_composed(schedule, params: CostParams) -> float:
+    """Completion time of a composed schedule under the round-synchronous
+    execution the ppermute lowering implements: every global round is one
+    permutation padded to its largest transfer, so it costs
+    ``alpha + beta * max_size`` and rounds are serialized.
+
+    This intentionally models the SPMD data plane (padded ppermutes), not
+    the asynchronous point-to-point machine of ``simulate_gather`` — the
+    two coincide on a single tree when transfers within a round are
+    equal-sized.
+    """
+    a, b = params.alpha, params.beta
+    return sum(a + b * max(t.size for t in rnd)
+               for rnd in schedule.rounds if rnd)
+
+
+def allgatherv_time(m, params: CostParams, root: int | None = None) -> float:
+    """Predicted composed-allgatherv time (gather + full-buffer broadcast)."""
+    from .composed import allgatherv_schedule
+    return simulate_composed(allgatherv_schedule(m, root=root), params)
+
+
+def alltoallv_time(size_matrix, params: CostParams) -> float:
+    """Predicted composed-alltoallv time (p packed rooted scatter trees)."""
+    from .composed import alltoallv_schedule
+    return simulate_composed(alltoallv_schedule(size_matrix), params)

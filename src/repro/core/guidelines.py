@@ -3,6 +3,16 @@
 G1:  Gather(m)  <= Gatherv(m)          (regular case m_i = m/p)
 G2:  Gatherv(m) <= Allreduce(1) + Gather(p * max_i m_i)
 
+Composed collectives (repro.core.composed) get the same treatment: an
+irregular composed collective must not be slower than its padded
+*regular* counterpart run through the same machinery —
+
+G3:  Allgatherv(m) <= Allreduce(1) + Allgather(p * max_i m_i)
+G4:  Alltoallv(S)  <= Allreduce(1) + Alltoall(p^2 * max S_ij)
+
+where the RHS regular collective is the composed algorithm itself on the
+max-padded (regular) problem, exactly like G2's manual-padding transform.
+
 Evaluated in the alpha-beta cost model for any gatherv algorithm; the same
 checks run against measured wall-clock times in benchmarks/jax_runtime.py.
 """
@@ -10,8 +20,11 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+import numpy as np
+
 from . import baselines
-from .costmodel import CostParams, allreduce_time, simulate_gather
+from .costmodel import (CostParams, allgatherv_time, allreduce_time,
+                        alltoallv_time, simulate_gather)
 from .treegather import GatherTree, build_gather_tree
 
 
@@ -63,3 +76,45 @@ def evaluate(m: list[int], root: int, params: CostParams,
         g1_ok=(not regular) or g_reg <= gatherv_time * slack,
         g2_ok=gatherv_time <= rhs * slack,
     )
+
+
+# --------------------------------------------------------------------------
+# composed collectives: G3 (allgatherv) / G4 (alltoallv)
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ComposedGuidelineReport:
+    """Composed irregular vs its max-padded regular counterpart."""
+
+    kind: str                   # "allgatherv" | "alltoallv"
+    composed_time: float        # irregular composed collective (LHS)
+    padded_regular_time: float  # Allreduce(1) + regular composed (RHS)
+    g_ok: bool
+    slack: float = 1.0
+
+
+def evaluate_allgatherv(m, params: CostParams,
+                        slack: float = 1.0) -> ComposedGuidelineReport:
+    """G3: the irregular allgatherv must not lose to padding every block
+    to max_i m_i and running the regular composed allgather (plus the
+    Allreduce(1) needed to agree on the max)."""
+    p = len(m)
+    lhs = allgatherv_time(m, params)
+    rhs = (allreduce_time(p, 1, params)
+           + allgatherv_time([max(m)] * p, params))
+    return ComposedGuidelineReport("allgatherv", lhs, rhs,
+                                   g_ok=lhs <= rhs * slack, slack=slack)
+
+
+def evaluate_alltoallv(size_matrix, params: CostParams,
+                       slack: float = 1.0) -> ComposedGuidelineReport:
+    """G4: the irregular alltoallv must not lose to padding every block to
+    max_ij S_ij and running the regular composed alltoall."""
+    S = np.asarray(size_matrix)
+    p = S.shape[0]
+    lhs = alltoallv_time(S, params)
+    bmax = int(S.max(initial=0))
+    rhs = (allreduce_time(p, 1, params)
+           + alltoallv_time(np.full((p, p), bmax, np.int64), params))
+    return ComposedGuidelineReport("alltoallv", lhs, rhs,
+                                   g_ok=lhs <= rhs * slack, slack=slack)

@@ -22,9 +22,24 @@ TPU adaptation of the paper's point-to-point schedules (DESIGN.md §2):
   ``tree_metadata_exchange`` demonstrates it and is property-tested against
   the host construction.
 
+* **composed mode** — irregular collectives built by composing rooted
+  trees (``repro.core.composed``).  ``allgatherv`` is the gather schedule
+  followed by a full-buffer broadcast down the reversed tree;
+  ``alltoallv`` is p rooted scatter trees packed round-robin into global
+  rounds that are partial permutations.  Both lower exactly like the
+  static-irregular mode: one ``lax.ppermute`` per global round (or per
+  size bucket), payloads padded to the round maximum, rows addressed by
+  device-dependent ``dynamic_slice`` starts into a flat row space that
+  concatenates the per-tree coordinate spaces.  ``ComposedPlan`` carries
+  the tables and is validated at build time.
+
 The ordering invariant of the paper carries over: every payload is a
 consecutive rank range written at its global offset, so the root's buffer
 ends up in rank order with no reordering pass (zero-copy receives).
+Composed schedules keep the same invariant in the flat space — a block's
+offset is identical on every device that ever holds it, so allgatherv's
+result and alltoallv's received blocks land at their consecutive-rank-
+range offsets with no reordering.
 """
 from __future__ import annotations
 
@@ -37,6 +52,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map  # noqa: F401  (re-exported for callers)
+
+from .composed import ComposedSchedule, allgatherv_schedule, alltoallv_schedule
 from .treegather import GatherTree, build_gather_tree, ceil_log2
 
 
@@ -72,6 +90,46 @@ class GathervPlan:
         return self.tree_bytes_padded / self.tree_bytes_exact - 1.0
 
 
+def _bucketed_steps(rounds, p: int, bucket_rounds: int):
+    """Lower transfer rounds to ppermute step tables.
+
+    ``rounds``: list of rounds, each a list of ``(src, dst, size, start)``
+    with endpoint-disjoint pairs.  Each round becomes up to
+    ``bucket_rounds`` ppermute steps (pairs split into size buckets:
+    extra latency, less padding).  Returns
+    ``(steps, exact, padded, max_payload)``.
+    """
+    steps = []
+    exact = 0
+    padded = 0
+    max_payload = 1
+    for rnd in rounds:
+        transfers = sorted(rnd, key=lambda t: t[2])
+        if not transfers:
+            continue
+        nb = min(bucket_rounds, len(transfers))
+        for idx in np.array_split(np.arange(len(transfers)), nb):
+            group = [transfers[i] for i in idx]
+            if not group:
+                continue
+            payload = max(t[2] for t in group)
+            send_start = np.zeros(p, np.int32)
+            recv_start = np.zeros(p, np.int32)
+            recv_valid = np.zeros(p, np.int32)
+            perm = []
+            for src, dst, size, start in group:
+                perm.append((src, dst))
+                send_start[src] = start
+                recv_start[dst] = start
+                recv_valid[dst] = size
+                exact += size
+                padded += payload
+            steps.append((tuple(perm), int(payload), send_start, recv_start,
+                          recv_valid))
+            max_payload = max(max_payload, payload)
+    return tuple(steps), exact, padded, max_payload
+
+
 def plan_gatherv(sizes, root: int, tree: GatherTree | None = None,
                  bucket_rounds: int = 1) -> GathervPlan:
     """Build the SPMD schedule for a gatherv over ``p = len(sizes)`` devices.
@@ -93,43 +151,39 @@ def plan_gatherv(sizes, root: int, tree: GatherTree | None = None,
         if e.size == 0:
             continue  # paper: no actual communication for empty blocks
         by_round.setdefault(e.round, []).append(e)
-
-    steps = []
-    exact = 0
-    padded = 0
-    max_payload = 1
-    for rnd in sorted(by_round):
-        edges = sorted(by_round[rnd], key=lambda e: e.size)
-        nb = min(bucket_rounds, len(edges))
-        buckets = np.array_split(np.arange(len(edges)), nb)
-        for idx in buckets:
-            group = [edges[i] for i in idx]
-            if not group:
-                continue
-            payload = max(e.size for e in group)
-            send_start = np.zeros(p, np.int32)
-            recv_start = np.zeros(p, np.int32)
-            recv_valid = np.zeros(p, np.int32)
-            perm = []
-            for e in group:
-                start = offsets[e.lo]
-                perm.append((e.child, e.parent))
-                send_start[e.child] = start
-                recv_start[e.parent] = start
-                recv_valid[e.parent] = e.size
-                exact += e.size
-                padded += payload
-            steps.append((tuple(perm), int(payload), send_start, recv_start,
-                          recv_valid))
-            max_payload = max(max_payload, payload)
+    rounds = [
+        [(e.child, e.parent, e.size, offsets[e.lo]) for e in by_round[rnd]]
+        for rnd in sorted(by_round)
+    ]
+    steps, exact, padded, max_payload = _bucketed_steps(rounds, p,
+                                                        bucket_rounds)
     buf_rows = total + max(cap, max_payload)
     return GathervPlan(p, root, sizes, offsets, total, cap, buf_rows,
-                       tuple(steps), exact, padded)
+                       steps, exact, padded)
 
 
 # --------------------------------------------------------------------------
 # SPMD executors (call inside shard_map)
 # --------------------------------------------------------------------------
+
+def _apply_steps(buf: jax.Array, steps, r, axis_name: str) -> jax.Array:
+    """Run ppermute step tables over a flat row buffer (shared by the
+    gatherv and composed executors).  Each step: slice ``payload`` rows at
+    the device's send offset, permute, mask-merge the valid prefix at the
+    device's receive offset (same flat offset: zero-copy invariant)."""
+    F = buf.shape[1]
+    for perm, payload, send_start, recv_start, recv_valid in steps:
+        s0 = jnp.asarray(send_start)[r]
+        out = jax.lax.dynamic_slice(buf, (s0, jnp.int32(0)), (payload, F))
+        got = jax.lax.ppermute(out, axis_name, perm)
+        r0 = jnp.asarray(recv_start)[r]
+        nv = jnp.asarray(recv_valid)[r]
+        cur = jax.lax.dynamic_slice(buf, (r0, jnp.int32(0)), (payload, F))
+        mask = (jnp.arange(payload, dtype=jnp.int32) < nv)[:, None]
+        upd = jnp.where(mask, got, cur)
+        buf = jax.lax.dynamic_update_slice(buf, upd, (r0, jnp.int32(0)))
+    return buf
+
 
 def gatherv_shard(x_local: jax.Array, plan: GathervPlan, axis_name: str) -> jax.Array:
     """Per-shard gatherv body.  ``x_local``: (cap, F) padded local block.
@@ -143,17 +197,7 @@ def gatherv_shard(x_local: jax.Array, plan: GathervPlan, axis_name: str) -> jax.
     # write own (padded) block at its global offset; spill rows are later
     # overwritten by received ranges (see module docstring invariant)
     buf = jax.lax.dynamic_update_slice(buf, x_local, (offs[r], jnp.int32(0)))
-    for perm, payload, send_start, recv_start, recv_valid in plan.steps:
-        s0 = jnp.asarray(send_start)[r]
-        out = jax.lax.dynamic_slice(buf, (s0, jnp.int32(0)), (payload, F))
-        got = jax.lax.ppermute(out, axis_name, perm)
-        r0 = jnp.asarray(recv_start)[r]
-        nv = jnp.asarray(recv_valid)[r]
-        cur = jax.lax.dynamic_slice(buf, (r0, jnp.int32(0)), (payload, F))
-        mask = (jnp.arange(payload, dtype=jnp.int32) < nv)[:, None]
-        upd = jnp.where(mask, got, cur)
-        buf = jax.lax.dynamic_update_slice(buf, upd, (r0, jnp.int32(0)))
-    return buf
+    return _apply_steps(buf, plan.steps, r, axis_name)
 
 
 def scatterv_shard(buf_root: jax.Array, plan: GathervPlan, axis_name: str) -> jax.Array:
@@ -211,7 +255,7 @@ def run_gatherv(mesh: Mesh, axis_name: str, blocks: list[np.ndarray],
 
     @jax.jit
     def run(xg):
-        return jax.shard_map(
+        return shard_map(
             lambda xl: gatherv_shard(xl, plan, axis_name),
             mesh=mesh, in_specs=P(axis_name), out_specs=P(axis_name),
         )(xg)
@@ -234,7 +278,7 @@ def run_scatterv(mesh: Mesh, axis_name: str, data: np.ndarray,
 
     @jax.jit
     def run(xg):
-        return jax.shard_map(
+        return shard_map(
             lambda xl: scatterv_shard(xl, plan, axis_name),
             mesh=mesh, in_specs=P(axis_name), out_specs=P(axis_name),
         )(xg)
@@ -242,6 +286,255 @@ def run_scatterv(mesh: Mesh, axis_name: str, data: np.ndarray,
     xg = jax.device_put(xin, NamedSharding(mesh, P(axis_name)))
     out = np.asarray(run(xg)).reshape(plan.p, plan.cap, F)
     return [out[i, : sizes[i]] for i in range(plan.p)], plan
+
+
+# --------------------------------------------------------------------------
+# composed collectives: allgatherv / alltoallv (repro.core.composed)
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ComposedPlan:
+    """Validated SPMD schedule for a composed collective.
+
+    Same step-table format as :class:`GathervPlan` (so the same
+    ``_apply_steps`` executor runs it), plus the flat-row-space layout:
+    device ``i`` writes its input at ``in_starts[i]``; for alltoallv the
+    ``extract`` tables copy each received block from its flat offset to
+    its consecutive-rank-range output offset (a static per-tree
+    ``dynamic_slice`` of ``chunk`` rows).
+    """
+
+    kind: str                       # "allgatherv" | "alltoallv"
+    p: int
+    root: int                       # allgatherv gather root; -1 alltoallv
+    total: int                      # flat row-space rows
+    cap: int                        # per-device input rows (padded)
+    buf_rows: int                   # working buffer rows (total + spill)
+    in_starts: tuple[int, ...]      # where device i's input lives (flat)
+    out_valid: tuple[int, ...]      # true output rows per device
+    out_rows: int                   # output buffer rows (incl. spill)
+    steps: tuple[tuple, ...]        # (perm, payload, send/recv tables)
+    extract: tuple[tuple, ...]      # alltoallv: (src_start, dst_start, valid)
+    chunk: int                      # static extraction slice rows
+    num_rounds: int                 # composed global rounds (pre-bucketing)
+    tree_bytes_exact: int
+    tree_bytes_padded: int
+
+    @property
+    def padding_overhead(self) -> float:
+        if self.tree_bytes_exact == 0:
+            return 0.0
+        return self.tree_bytes_padded / self.tree_bytes_exact - 1.0
+
+    def validate(self) -> None:
+        """ppermute legality + bounds; raises AssertionError on violation."""
+        recv_total = 0
+        for perm, payload, send_start, recv_start, recv_valid in self.steps:
+            srcs = [s for s, _ in perm]
+            dsts = [d for _, d in perm]
+            assert len(set(srcs)) == len(srcs), "step has a double sender"
+            assert len(set(dsts)) == len(dsts), "step has a double receiver"
+            assert 1 <= payload
+            for s, d in perm:
+                assert 0 <= send_start[s] <= self.buf_rows - payload
+                assert 0 <= recv_start[d] <= self.buf_rows - payload
+                assert 0 < recv_valid[d] <= payload
+                recv_total += int(recv_valid[d])
+        assert recv_total == self.tree_bytes_exact
+        assert self.tree_bytes_exact <= self.tree_bytes_padded
+        for src_start, dst_start, valid in self.extract:
+            for i in range(self.p):
+                if valid[i] > 0:
+                    assert 0 <= src_start[i] <= self.buf_rows - self.chunk
+                    assert 0 <= dst_start[i] <= self.out_rows - self.chunk
+                    assert valid[i] <= self.chunk
+
+
+def plan_allgatherv(sizes, root: int | None = None,
+                    bucket_rounds: int = 1,
+                    schedule: ComposedSchedule | None = None) -> ComposedPlan:
+    """Lower an allgatherv schedule (gather + broadcast) to ppermute steps.
+
+    Every device ends with all blocks in rank order in rows [0:total] of
+    its buffer.  ``root=None`` lets the algorithm choose the gather root
+    (Lemma 1, no waiting penalty).
+    """
+    if schedule is None:
+        schedule = allgatherv_schedule(sizes, root=root)
+    assert schedule.kind == "allgatherv"
+    # a prebuilt schedule must describe THIS problem, not a stale one
+    assert (schedule.sizes[0] == np.asarray([int(s) for s in sizes])).all(), \
+        "schedule was built for different block sizes"
+    assert root is None or schedule.root == root, \
+        "schedule was built for a different root"
+    sizes = tuple(int(s) for s in schedule.sizes[0])
+    p = schedule.p
+    total = schedule.total_rows
+    cap = max(1, max(sizes, default=0))
+    offsets = tuple(int(x) for x in schedule.offsets(0))
+    rounds = [[(t.src, t.dst, t.size, t.start) for t in rnd]
+              for rnd in schedule.rounds]
+    steps, exact, padded, max_payload = _bucketed_steps(rounds, p,
+                                                        bucket_rounds)
+    buf_rows = total + max(cap, max_payload)
+    plan = ComposedPlan(
+        "allgatherv", p, schedule.root, total, cap, buf_rows,
+        in_starts=offsets, out_valid=(total,) * p, out_rows=buf_rows,
+        steps=steps, extract=(), chunk=1, num_rounds=schedule.num_rounds,
+        tree_bytes_exact=exact, tree_bytes_padded=padded)
+    plan.validate()
+    return plan
+
+
+def plan_alltoallv(size_matrix, bucket_rounds: int = 1,
+                   schedule: ComposedSchedule | None = None) -> ComposedPlan:
+    """Lower an alltoallv schedule (p packed scatter trees) to ppermute
+    steps plus per-tree extraction tables.
+
+    Device ``i`` supplies its packed row (blocks destined to ranks
+    0..p-1, concatenated); it receives blocks from all sources, each at
+    its consecutive-rank-range output offset ``sum_{i'<i} S[i'][j]``.
+    """
+    if schedule is None:
+        schedule = alltoallv_schedule(size_matrix)
+    assert schedule.kind == "alltoallv"
+    # a prebuilt schedule must describe THIS problem, not a stale one
+    assert (schedule.sizes == np.asarray(size_matrix, dtype=np.int64)).all(), \
+        "schedule was built for a different size matrix"
+    S = schedule.sizes
+    p = schedule.p
+    row_totals = S.sum(axis=1)
+    col_totals = S.sum(axis=0)
+    total = schedule.total_rows
+    cap = max(1, int(row_totals.max(initial=0)))
+    chunk = max(1, int(S.max(initial=0)))
+    rounds = [[(t.src, t.dst, t.size, t.start) for t in rnd]
+              for rnd in schedule.rounds]
+    steps, exact, padded, max_payload = _bucketed_steps(rounds, p,
+                                                        bucket_rounds)
+    buf_rows = total + max(cap, max_payload, chunk)
+    out_valid = tuple(int(c) for c in col_totals)
+    out_rows = max(1, int(col_totals.max(initial=0))) + chunk
+    # output offsets: block (r -> j) lands at sum_{i<r} S[i][j] — the
+    # column-wise consecutive-rank-range invariant
+    dst_off = np.concatenate([np.zeros((1, p), np.int64),
+                              np.cumsum(S, axis=0)[:-1]])
+    extract = []
+    for r in range(p):
+        if row_totals[r] == 0:
+            continue
+        offs = schedule.offsets(r)
+        src_start = (int(schedule.row_starts[r]) + offs).astype(np.int32)
+        dst_start = dst_off[r].astype(np.int32)
+        valid = S[r].astype(np.int32)
+        extract.append((src_start, dst_start, valid))
+    plan = ComposedPlan(
+        "alltoallv", p, -1, total, cap, buf_rows,
+        in_starts=tuple(int(x) for x in schedule.row_starts),
+        out_valid=out_valid, out_rows=out_rows, steps=steps,
+        extract=tuple(extract), chunk=chunk, num_rounds=schedule.num_rounds,
+        tree_bytes_exact=exact, tree_bytes_padded=padded)
+    plan.validate()
+    return plan
+
+
+def allgatherv_shard(x_local: jax.Array, plan: ComposedPlan,
+                     axis_name: str) -> jax.Array:
+    """Per-shard allgatherv body.  ``x_local``: (cap, F) padded block.
+    Returns (buf_rows, F); rows [0:total] hold all blocks in rank order on
+    EVERY device (gather rounds, then broadcast rounds)."""
+    r = jax.lax.axis_index(axis_name)
+    F = x_local.shape[1]
+    starts = jnp.asarray(plan.in_starts, jnp.int32)
+    buf = jnp.zeros((plan.buf_rows, F), x_local.dtype)
+    buf = jax.lax.dynamic_update_slice(buf, x_local, (starts[r], jnp.int32(0)))
+    return _apply_steps(buf, plan.steps, r, axis_name)
+
+
+def alltoallv_shard(x_local: jax.Array, plan: ComposedPlan,
+                    axis_name: str) -> jax.Array:
+    """Per-shard alltoallv body.  ``x_local``: (cap, F) packed row of
+    blocks destined to ranks 0..p-1.  Returns (out_rows, F); rows
+    [0:out_valid[j]] on device j are the received blocks ordered by
+    source rank (each at its consecutive-rank-range offset)."""
+    r = jax.lax.axis_index(axis_name)
+    F = x_local.shape[1]
+    starts = jnp.asarray(plan.in_starts, jnp.int32)
+    buf = jnp.zeros((plan.buf_rows, F), x_local.dtype)
+    buf = jax.lax.dynamic_update_slice(buf, x_local, (starts[r], jnp.int32(0)))
+    buf = _apply_steps(buf, plan.steps, r, axis_name)
+    out = jnp.zeros((plan.out_rows, F), x_local.dtype)
+    mask_rows = jnp.arange(plan.chunk, dtype=jnp.int32)[:, None]
+    for src_start, dst_start, valid in plan.extract:
+        s0 = jnp.asarray(src_start)[r]
+        d0 = jnp.asarray(dst_start)[r]
+        nv = jnp.asarray(valid)[r]
+        blk = jax.lax.dynamic_slice(buf, (s0, jnp.int32(0)), (plan.chunk, F))
+        cur = jax.lax.dynamic_slice(out, (d0, jnp.int32(0)), (plan.chunk, F))
+        upd = jnp.where(mask_rows < nv, blk, cur)
+        out = jax.lax.dynamic_update_slice(out, upd, (d0, jnp.int32(0)))
+    return out
+
+
+def run_allgatherv(mesh: Mesh, axis_name: str, blocks: list[np.ndarray],
+                   root: int | None = None, bucket_rounds: int = 1):
+    """Host-facing helper: allgatherv ragged ``blocks`` over the mesh.
+    Returns ((p, total, F) array — every device's rank-ordered copy —
+    and the plan)."""
+    sizes = [int(b.shape[0]) for b in blocks]
+    F = blocks[0].shape[1]
+    if len(blocks) != mesh.devices.size:
+        raise ValueError(f"{len(blocks)} blocks for a "
+                         f"{mesh.devices.size}-device mesh")
+    plan = plan_allgatherv(sizes, root=root, bucket_rounds=bucket_rounds)
+    x = np.zeros((plan.p, plan.cap, F), blocks[0].dtype)
+    for i, b in enumerate(blocks):
+        x[i, : sizes[i]] = b
+    x = x.reshape(plan.p * plan.cap, F)
+
+    @jax.jit
+    def run(xg):
+        return shard_map(
+            lambda xl: allgatherv_shard(xl, plan, axis_name),
+            mesh=mesh, in_specs=P(axis_name), out_specs=P(axis_name),
+        )(xg)
+
+    xg = jax.device_put(x, NamedSharding(mesh, P(axis_name)))
+    out = np.asarray(run(xg)).reshape(plan.p, plan.buf_rows, F)
+    return out[:, : plan.total], plan
+
+
+def run_alltoallv(mesh: Mesh, axis_name: str,
+                  blocks: list[list[np.ndarray]], bucket_rounds: int = 1):
+    """Host-facing helper: ``blocks[i][j]`` is the (S[i][j], F) block rank
+    ``i`` sends to rank ``j``.  Returns (list of per-device received
+    buffers — device j's is ``concat_i blocks[i][j]`` — and the plan)."""
+    p = len(blocks)
+    if p != mesh.devices.size:
+        raise ValueError(f"{p}x{p} block matrix for a "
+                         f"{mesh.devices.size}-device mesh")
+    S = [[int(b.shape[0]) for b in row] for row in blocks]
+    F = blocks[0][0].shape[1]
+    dtype = blocks[0][0].dtype
+    plan = plan_alltoallv(S, bucket_rounds=bucket_rounds)
+    x = np.zeros((p, plan.cap, F), dtype)
+    for i, row in enumerate(blocks):
+        off = 0
+        for b in row:
+            x[i, off: off + b.shape[0]] = b
+            off += b.shape[0]
+    x = x.reshape(p * plan.cap, F)
+
+    @jax.jit
+    def run(xg):
+        return shard_map(
+            lambda xl: alltoallv_shard(xl, plan, axis_name),
+            mesh=mesh, in_specs=P(axis_name), out_specs=P(axis_name),
+        )(xg)
+
+    xg = jax.device_put(x, NamedSharding(mesh, P(axis_name)))
+    out = np.asarray(run(xg)).reshape(p, plan.out_rows, F)
+    return [out[j, : plan.out_valid[j]] for j in range(p)], plan
 
 
 # --------------------------------------------------------------------------
@@ -328,7 +621,7 @@ class RaggedGathervPlanner:
         key = (bsizes, root, blocks[0].shape[1], str(blocks[0].dtype))
         if key not in self._cache:
             plan = plan_gatherv(bsizes, root)
-            fn = jax.jit(jax.shard_map(
+            fn = jax.jit(shard_map(
                 lambda xl: gatherv_shard(xl, plan, self.axis),
                 mesh=self.mesh, in_specs=P(self.axis), out_specs=P(self.axis)))
             self._cache[key] = (plan, fn)

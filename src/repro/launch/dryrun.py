@@ -29,7 +29,7 @@ import jax
 from repro.analysis import collective_bytes_from_hlo
 from repro.analysis.hloflow import analyze_hlo
 from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import as_shardings, make_production_mesh, mesh_context
 from repro.launch.specs import build_cell
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
@@ -64,12 +64,12 @@ def run_cell(arch: str, shape: str, mesh_kind: str, force: bool = False,
            "ok": False}
     t0 = time.time()
     try:
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             step, args, in_specs, out_specs, donate, meta = build_cell(
                 arch, shape, mesh, variant=variant)
             rec.update(meta)
-            jitted = jax.jit(step, in_shardings=in_specs,
-                             out_shardings=out_specs,
+            jitted = jax.jit(step, in_shardings=as_shardings(mesh, in_specs),
+                             out_shardings=as_shardings(mesh, out_specs),
                              donate_argnums=donate)
             t1 = time.time()
             lowered = jitted.lower(*args)

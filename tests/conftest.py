@@ -3,9 +3,19 @@
 IMPORTANT: XLA_FLAGS / device-count forcing is NEVER set here (the spec:
 smoke tests and benches must see 1 device).  Multi-device tests run child
 scripts in subprocesses that set XLA_FLAGS themselves (tests/multidevice/).
+
+``hypothesis`` is OPTIONAL: when it is not installed, a tiny deterministic
+fallback shim (below) is registered in ``sys.modules`` before any test
+module imports, so the property tests still collect and run — each
+``@given`` test executes a capped number of seeded pseudo-random examples
+instead of hypothesis' managed search.  Install the real hypothesis to get
+shrinking and the full example budget.
 """
+import functools
 import os
+import random
 import sys
+import types
 
 import pytest
 
@@ -13,6 +23,105 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 if SRC not in sys.path:
     sys.path.insert(0, SRC)
+
+
+# --------------------------------------------------------------------------
+# hypothesis fallback shim (installed only when hypothesis is missing)
+# --------------------------------------------------------------------------
+
+# cap the per-test example count so the fallback fast lane stays fast;
+# the declared max_examples still applies when it is smaller
+_SHIM_MAX_EXAMPLES = int(os.environ.get("REPRO_SHIM_MAX_EXAMPLES", "25"))
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self._draw_fn = draw_fn
+
+    def example(self, rng):
+        return self._draw_fn(rng)
+
+
+def _shim_integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _shim_lists(elements, min_size=0, max_size=None):
+    hi = max_size if max_size is not None else min_size + 10
+
+    def draw(rng):
+        n = rng.randint(min_size, hi)
+        return [elements.example(rng) for _ in range(n)]
+
+    return _Strategy(draw)
+
+
+def _shim_sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+
+def _shim_composite(fn):
+    def factory(*args, **kwargs):
+        def draw_value(rng):
+            return fn(lambda s: s.example(rng), *args, **kwargs)
+
+        return _Strategy(draw_value)
+
+    return functools.wraps(fn)(factory)
+
+
+def _shim_settings(max_examples=None, deadline=None, **_kw):
+    def deco(fn):
+        if max_examples is not None:
+            fn._shim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def _shim_given(*strategies):
+    def deco(fn):
+        n = min(getattr(fn, "_shim_max_examples", _SHIM_MAX_EXAMPLES),
+                _SHIM_MAX_EXAMPLES)
+
+        def wrapper():
+            # deterministic per-test stream: same examples on every run
+            rng = random.Random(fn.__qualname__)
+            for _ in range(n):
+                fn(*(s.example(rng) for s in strategies))
+
+        # plain attribute copies; functools.wraps would set __wrapped__ and
+        # pytest would then see the original signature and demand fixtures
+        # for the strategy-provided arguments
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco
+
+
+def _install_hypothesis_shim():
+    hyp = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = _shim_integers
+    st.lists = _shim_lists
+    st.sampled_from = _shim_sampled_from
+    st.composite = _shim_composite
+    hyp.strategies = st
+    hyp.given = _shim_given
+    hyp.settings = _shim_settings
+    hyp.__is_repro_shim__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st
+
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _install_hypothesis_shim()
 
 
 def subprocess_env():

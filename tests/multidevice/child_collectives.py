@@ -19,7 +19,7 @@ from repro.core import build_gather_tree
 from repro.core.distributions import NAMES, block_sizes
 from repro.core.jax_collectives import (
     RaggedGathervPlanner, gatherv_shard, plan_gatherv, run_gatherv,
-    run_scatterv, tree_metadata_exchange,
+    run_scatterv, shard_map, tree_metadata_exchange,
 )
 from repro.analysis import collective_bytes_from_hlo
 
@@ -100,7 +100,7 @@ def check_metadata_exchange():
             def body(ml):
                 est, groot, total = tree_metadata_exchange(ml[0], "x", PP)
                 return est[None], groot[None], total[None]
-            return jax.shard_map(
+            return shard_map(
                 body, mesh=mesh, in_specs=P("x"), out_specs=P("x"))(m)
 
         m = jax.device_put(np.asarray(sizes, np.int32),
@@ -131,7 +131,7 @@ def check_hlo_collectives():
     mesh = mesh1d()
     sizes = block_sizes("decreasing", PP, 64, seed=4)
     plan = plan_gatherv(sizes, 3)
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(shard_map(
         lambda xl: gatherv_shard(xl, plan, "x"),
         mesh=mesh, in_specs=P("x"), out_specs=P("x")))
     x = jnp.zeros((plan.p * plan.cap, 4), jnp.float32)
