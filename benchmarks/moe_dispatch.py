@@ -6,12 +6,14 @@ Two MoE communication phases, both in the ICI cost model:
 * **combine** (expert outputs back to the coordinator): an irregular
   *gatherv* — compare padded all-gather, direct sends, the TUW tree.
 * **dispatch** (routed tokens from data shards to expert owners): an
-  irregular *alltoallv* — runs end-to-end through the composed
-  ``alltoallv_schedule`` (p rooted scatter trees packed into permutation
-  rounds) and reports cost-model-predicted bytes (p independent
-  ``build_gather_tree`` scatters) vs the bytes the schedule actually
-  moves, plus the padded data-plane bytes of the ``ComposedPlan``
-  ppermute lowering.
+  irregular *alltoallv* — planned through the autotuning
+  ``repro.tuner.PlannerService`` (selection over composed-schedule
+  variants, persistent-cacheable) and reporting cost-model-predicted
+  bytes (p independent ``build_gather_tree`` scatters) vs the bytes the
+  selected ``ComposedPlan`` actually moves, plus its padded data-plane
+  bytes.  The repeated size-signature of the dispatch path is exactly
+  what the service's plan cache is for: the final rows replan a warm
+  signature and report the hit counters.
 """
 from __future__ import annotations
 
@@ -27,13 +29,13 @@ from repro.core import extensions as ext
 from repro.core.composed import alltoallv_schedule, independent_scatter_bytes
 from repro.core.costmodel import allreduce_time, simulate_composed
 from repro.core.guidelines import regular_gather_time
-from repro.core.jax_collectives import plan_alltoallv
 from repro.models import init_params
 from repro.models.moe import moe_apply
+from repro.tuner import PlannerService, enumerate_candidates, select
 
 from .common import emit
 
-ICI = CostParams(alpha=1.0, beta=1.0 / 50e3)  # us, bytes
+ICI = CostParams.tpu_ici().to_us()  # us, bytes (explicit unit story)
 
 
 def expert_loads(arch: str, batch=4, seq=64):
@@ -67,6 +69,8 @@ def dispatch_matrix(frac, tokens: int, p: int, bytes_per_tok: int) -> np.ndarray
 
 def run(emit_rows=True):
     rows = []
+    svc = PlannerService(mesh=None, quantum=1, params=CostParams.tpu_ici())
+    warm_keys = []
     for arch in ("mixtral-8x7b", "deepseek-moe-16b"):
         loads, cfg = expert_loads(arch)
         # scale the measured load *distribution* to production dims: the
@@ -91,15 +95,24 @@ def run(emit_rows=True):
                          f"vs_tuw={t_lin/max(t_tuw,1e-9):.2f}x"))
             rows.append((f"moe_combine_padded/{arch}/{regime}", t_pad,
                          f"vs_tuw={t_pad/max(t_tuw,1e-9):.2f}x"))
+            sel = select(enumerate_candidates("gatherv", m, root, ICI,
+                                              view="model"), ICI)
+            rows.append((f"moe_combine_selected/{arch}/{regime}", sel.cost,
+                         f"algo={sel.chosen};"
+                         f"vs_tuw={sel.cost/max(t_tuw,1e-9):.2f}x"))
             # ---------------------------------------------- dispatch (alltoallv)
             S = dispatch_matrix(frac, tokens, E, bytes_per_tok)
+            rec = svc.plan_record("alltoallv", S)
+            warm_keys.append(S)
+            plan = rec.plan
             sched = alltoallv_schedule(S)
-            plan = plan_alltoallv(S, schedule=sched)
             pred_bytes = independent_scatter_bytes(S)   # cost model: p trees
             meas_bytes = sched.bytes_exact              # composed schedule
+            assert plan.tree_bytes_exact == meas_bytes  # service plans the same
             t_a2av = simulate_composed(sched, ICI)
             rows.append((
                 f"moe_dispatch_alltoallv/{arch}/{regime}", t_a2av,
+                f"algo={rec.algo};"
                 f"pred_MB={pred_bytes/1e6:.2f};meas_MB={meas_bytes/1e6:.2f};"
                 f"ratio={meas_bytes/max(pred_bytes,1):.2f};"
                 f"padded_MB={plan.tree_bytes_padded/1e6:.2f};"
@@ -116,6 +129,14 @@ def run(emit_rows=True):
                 f"moe_dispatch_padded/{arch}/{regime}", t_a2a_pad,
                 f"vs_a2av={t_a2a_pad/max(t_a2av,1e-9):.2f}x;"
                 f"G4_ok={g4_ok}"))
+    # warm path: the same dispatch signatures replan through the cache in
+    # O(1) — no tree construction, hit counter moves, plan identity stable
+    h0 = svc.plan_hits
+    for S in warm_keys:
+        rec = svc.plan_record("alltoallv", S)
+    assert svc.plan_hits - h0 == len(warm_keys), svc.stats
+    rows.append(("moe_dispatch_replan/warm", float(svc.plan_hits),
+                 f"misses={svc.plan_misses};entries={len(svc.cache)}"))
     if emit_rows:
         emit(rows)
     return rows, None

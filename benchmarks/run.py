@@ -8,7 +8,7 @@ import time
 
 def main() -> None:
     from . import extensions_bench, guidelines_bench, jax_runtime, \
-        moe_dispatch, paper_tables, roofline, variants
+        moe_dispatch, paper_tables, roofline, tuner_bench, variants
     t0 = time.time()
     print("name,us_per_call,derived")
     paper_tables.run()
@@ -16,6 +16,7 @@ def main() -> None:
     guidelines_bench.run()
     extensions_bench.run()
     moe_dispatch.run()
+    tuner_bench.run(synthetic=True)
     jax_runtime.run()
     roofline.run()
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)

@@ -10,7 +10,12 @@ communication phases over 8 host devices:
 * **combine** — per-expert token blocks gather back to the coordinator
   with the TUW gatherv tree;
 
-comparing moved bytes against the padded regular alternatives.
+comparing moved bytes against the padded regular alternatives.  Both
+phases route through the autotuning ``repro.tuner.PlannerService``: the
+service selects the schedule under its calibrated (alpha, beta), caches
+the lowered plan by quantized size signature, and serves the repeated
+dispatch signature of the second batch from the cache (no tree
+construction — watch the hit counter).
 
 Run WITHOUT setting XLA_FLAGS yourself — the script forces 8 host devices
 for the shard_map demo:
@@ -27,9 +32,9 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core.composed import independent_scatter_bytes
-from repro.core.jax_collectives import run_alltoallv, run_gatherv
 from repro.models import init_params
 from repro.models.moe import moe_apply
+from repro.tuner import PlannerService
 
 cfg = get_config("mixtral-8x7b").reduced()
 params = init_params(jax.random.PRNGKey(0), cfg)
@@ -45,6 +50,7 @@ print(f"routed {4 * 64} tokens x top-{cfg.moe.top_k} over "
 
 mesh = jax.make_mesh((8,), ("x",))
 rng = np.random.default_rng(0)
+svc = PlannerService(mesh=mesh, axis_name="x", quantum=4)
 
 # ---------------------------------------------------------------- dispatch
 # 8-device layout: device j owns expert j (the reduced config has E=4
@@ -59,7 +65,7 @@ for j, l in enumerate(loads[:8]):
     S[:rem, j] += 1
 blocks = [[rng.standard_normal((int(S[i, j]), cfg.d_model)).astype(np.float32)
            for j in range(8)] for i in range(8)]
-recv, plan = run_alltoallv(mesh, "x", blocks)
+recv, plan = svc.alltoallv(blocks)
 for j in range(8):
     want = np.concatenate([blocks[i][j] for i in range(8)],
                           axis=0).reshape(-1, cfg.d_model)
@@ -72,6 +78,17 @@ pad_rows = 8 * 7 * int(S.max())  # regular alltoall: every block max-padded
 print(f"padded all-to-all alternative: {pad_rows} rows "
       f"({pad_rows / max(plan.tree_bytes_padded, 1):.1f}x more)")
 
+# a second batch routes the SAME per-expert loads (the steady-state MoE
+# signature): the planner serves it from cache — no tree construction
+h0, c0 = svc.plan_hits, svc.compiled_hits
+blocks2 = [[rng.standard_normal((int(S[i, j]), cfg.d_model))
+            .astype(np.float32) for j in range(8)] for i in range(8)]
+recv2, plan2 = svc.alltoallv(blocks2)
+assert plan2 is plan, "warm replan must reuse the cached plan object"
+print(f"warm dispatch replan: plan cache hit (+{svc.plan_hits - h0}), "
+      f"compiled executable hit (+{svc.compiled_hits - c0}), "
+      f"plan identity stable")
+
 # ----------------------------------------------------------------- combine
 # expert outputs return to the expert-parallel coordinator: EP=4 experts x
 # DP=2 token shards; gather all ragged half-shards with the TUW tree
@@ -80,10 +97,11 @@ for l in loads:
     shard_sizes += [int(l) // 2, int(l) - int(l) // 2]
 blocks = [rng.standard_normal((s, cfg.d_model)).astype(np.float32)
           for s in shard_sizes]
-got, plan = run_gatherv(mesh, "x", blocks, root=0)
+got, plan = svc.gatherv(blocks, root=0)
 want = np.concatenate(blocks, axis=0)
 np.testing.assert_allclose(got, want)
-print(f"TUW gatherv combine over mesh{mesh.shape}: OK, "
+algo = svc.last_selection.chosen if svc.plan_misses else "cached"
+print(f"TUW gatherv combine over mesh{mesh.shape}: OK ({algo}), "
       f"{plan.tree_bytes_exact} rows moved (padded {plan.tree_bytes_padded})")
 pad_rows = 8 * 7 * max(int(l) for l in loads)
 print(f"padded all-gather alternative: {pad_rows} rows "

@@ -13,6 +13,7 @@ reversed tree, which we exploit (and property-test).
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 
 from .treegather import GatherTree, ceil_log2, construction_alpha_rounds
@@ -20,29 +21,76 @@ from .treegather import GatherTree, ceil_log2, construction_alpha_rounds
 
 @dataclass(frozen=True)
 class CostParams:
-    """alpha: startup latency (us); beta: time per unit (us/unit)."""
+    """Linear-transmission machine parameters with an EXPLICIT unit story.
+
+    ``alpha`` is the startup latency in ``time_unit``; ``beta`` is the
+    transfer time per data unit, in ``time_unit`` per ``data_unit``.  Every
+    size handed to a simulator must be in ``data_unit``, and every returned
+    completion time is in ``time_unit``.  The unit tags are metadata — they
+    never rescale anything — but they let callers assert that two parameter
+    sets (or a parameter set and a size vector) agree before comparing
+    times; ``require_compatible`` is that assertion.
+
+    Canonical calibrations:
+
+    * ``infiniband_qdr`` — the paper's Tables 1-6 setting: microseconds per
+      MPI_INT-sized (4-byte) unit (DESIGN.md §9).
+    * ``tpu_ici`` — SI units, no folklore factors: seconds and bytes
+      (alpha = 1e-6 s/hop, beta = 1/50e9 s/byte for a 50 GB/s ICI link).
+      Use ``to_us()`` when a caller reports microseconds.
+    """
 
     alpha: float
     beta: float
+    time_unit: str = "us"
+    data_unit: str = "unit"
 
-    # calibrations (see DESIGN.md §9); units are MPI_INT-sized (4 B) to match
-    # the paper's tables.
+    def validate(self) -> None:
+        """Finite, non-negative parameters; raises ValueError otherwise."""
+        ok = (math.isfinite(self.alpha) and math.isfinite(self.beta)
+              and self.alpha >= 0.0 and self.beta >= 0.0)
+        if not ok:
+            raise ValueError(f"invalid CostParams: alpha={self.alpha}, "
+                             f"beta={self.beta}")
+
+    def require_compatible(self, other: "CostParams") -> None:
+        """Assert ``other`` uses the same units (times are comparable)."""
+        if (self.time_unit, self.data_unit) != (other.time_unit,
+                                                other.data_unit):
+            raise ValueError(
+                f"unit mismatch: ({self.time_unit}, {self.data_unit}) vs "
+                f"({other.time_unit}, {other.data_unit})")
+
+    def to_us(self) -> "CostParams":
+        """Convert a seconds-based calibration to microseconds."""
+        if self.time_unit == "us":
+            return self
+        if self.time_unit != "s":
+            raise ValueError(f"cannot convert from {self.time_unit!r}")
+        return CostParams(self.alpha * 1e6, self.beta * 1e6,
+                          time_unit="us", data_unit=self.data_unit)
+
     @staticmethod
     def infiniband_qdr() -> "CostParams":
-        return CostParams(alpha=1.8, beta=1.4e-3)  # ~2.9 GB/s per process pair
+        # ~2.9 GB/s per process pair; us per 4-byte unit (paper tables)
+        return CostParams(alpha=1.8, beta=1.4e-3,
+                          time_unit="us", data_unit="MPI_INT(4B)")
 
     @staticmethod
     def tpu_ici() -> "CostParams":
-        # ~1 us/hop, 50 GB/s/link; unit = 1 byte here
-        return CostParams(alpha=1.0, beta=1.0 / 50e3)  # us per byte*1e-6? see note
+        # 1 us per hop startup, 50 GB/s per ICI link: seconds and bytes,
+        # exactly the constants collective_seconds() uses.
+        return CostParams(alpha=1e-6, beta=1.0 / 50e9,
+                          time_unit="s", data_unit="byte")
 
 
-# NOTE: for the TPU calibration, callers pass sizes in bytes and we use
-# beta = 1/50e9 seconds/byte expressed in us: 2e-5 us/KiB is awkward; the
-# roofline pipeline uses plain seconds via collective_seconds() instead.
 def collective_seconds(bytes_moved: float, link_bw: float = 50e9,
                        hops: int = 1, alpha_s: float = 1e-6) -> float:
-    """Roofline collective term for bytes crossing one device's link."""
+    """Roofline collective term for bytes crossing one device's link.
+
+    Equivalent to ``hops * alpha + beta * bytes`` under
+    ``CostParams.tpu_ici()`` (seconds, bytes).
+    """
     return hops * alpha_s + bytes_moved / link_bw
 
 
@@ -57,6 +105,7 @@ def simulate_gather(tree: GatherTree, params: CostParams,
     """
     if policy not in ("ready", "round"):
         raise ValueError(policy)
+    params.validate()
     a, b = params.alpha, params.beta
     # topological processing: a node's ready time needs all children's ready
     # times.  Children rounds < node's send round, so process edges grouped
@@ -96,6 +145,7 @@ def simulate_scatter(tree: GatherTree, params: CostParams,
     its own subtree's data.  By reversing time, this equals gather
     completion on the same tree — we compute it directly for clarity.
     """
+    params.validate()
     a, b = params.alpha, params.beta
     st = tree.reversed_for_scatter()
     # recv_done[x]: time x has received its subtree data from its parent.
@@ -144,6 +194,7 @@ def _preorder(tree: GatherTree) -> list[int]:
 
 def allreduce_time(p: int, size: int, params: CostParams) -> float:
     """Recursive-doubling allreduce of ``size`` units (G2's Allreduce(1))."""
+    params.validate()
     if p <= 1:
         return 0.0
     return ceil_log2(p) * (params.alpha + params.beta * size)
@@ -164,6 +215,7 @@ def simulate_composed(schedule, params: CostParams) -> float:
     two coincide on a single tree when transfers within a round are
     equal-sized.
     """
+    params.validate()
     a, b = params.alpha, params.beta
     return sum(a + b * max(t.size for t in rnd)
                for rnd in schedule.rounds if rnd)

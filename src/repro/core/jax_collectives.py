@@ -15,9 +15,13 @@ TPU adaptation of the paper's point-to-point schedules (DESIGN.md §2):
 
 * **runtime-ragged mode** — sizes known only at run time (MoE loads).  A
   data-dependent communication graph is not expressible inside one XLA
-  program, so ``RaggedGathervPlanner`` quantizes sizes to buckets and
-  caches one compiled executable per bucketed size tuple (the standard
-  JAX/TPU raggedness answer).  The fully distributed Lemma-3 construction
+  program, so sizes quantize to buckets and one compiled executable is
+  cached per bucketed size tuple (the standard JAX/TPU raggedness
+  answer).  This now lives in ``repro.tuner.service.PlannerService``,
+  which also *selects* the schedule per calibrated (alpha, beta) and
+  covers all four ops; ``RaggedGathervPlanner`` below is a
+  backward-compatible shim over it.  The fully distributed Lemma-3
+  construction
   itself IS expressible on device with static scalar ppermutes —
   ``tree_metadata_exchange`` demonstrates it and is property-tested against
   the host construction.
@@ -43,7 +47,6 @@ range offsets with no reordering.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 
 import numpy as np
@@ -90,11 +93,37 @@ class GathervPlan:
         return self.tree_bytes_padded / self.tree_bytes_exact - 1.0
 
 
+def _legalize_round(transfers):
+    """Split one round's transfers into ppermute-legal waves.
+
+    A ``lax.ppermute`` permutation needs unique sources AND unique
+    destinations.  TUW merge rounds and composed global rounds satisfy that
+    by construction, but baseline trees the tuner may select do not (a
+    linear tree funnels every sender into the root in round 0) — those
+    serialize on the shared endpoint's port in the telephone model, which
+    is exactly what consecutive waves express.  Greedy first-fit preserves
+    the (size-sorted) order within a wave.
+    """
+    waves: list[tuple[set, set, list]] = []
+    for t in transfers:
+        src, dst = t[0], t[1]
+        for srcs, dsts, group in waves:
+            if src not in srcs and dst not in dsts:
+                srcs.add(src)
+                dsts.add(dst)
+                group.append(t)
+                break
+        else:
+            waves.append(({src}, {dst}, [t]))
+    return [group for _, _, group in waves]
+
+
 def _bucketed_steps(rounds, p: int, bucket_rounds: int):
     """Lower transfer rounds to ppermute step tables.
 
-    ``rounds``: list of rounds, each a list of ``(src, dst, size, start)``
-    with endpoint-disjoint pairs.  Each round becomes up to
+    ``rounds``: list of rounds, each a list of ``(src, dst, size, start)``.
+    Rounds with endpoint conflicts are first split into permutation-legal
+    waves (see ``_legalize_round``); each wave then becomes up to
     ``bucket_rounds`` ppermute steps (pairs split into size buckets:
     extra latency, less padding).  Returns
     ``(steps, exact, padded, max_payload)``.
@@ -107,26 +136,27 @@ def _bucketed_steps(rounds, p: int, bucket_rounds: int):
         transfers = sorted(rnd, key=lambda t: t[2])
         if not transfers:
             continue
-        nb = min(bucket_rounds, len(transfers))
-        for idx in np.array_split(np.arange(len(transfers)), nb):
-            group = [transfers[i] for i in idx]
-            if not group:
-                continue
-            payload = max(t[2] for t in group)
-            send_start = np.zeros(p, np.int32)
-            recv_start = np.zeros(p, np.int32)
-            recv_valid = np.zeros(p, np.int32)
-            perm = []
-            for src, dst, size, start in group:
-                perm.append((src, dst))
-                send_start[src] = start
-                recv_start[dst] = start
-                recv_valid[dst] = size
-                exact += size
-                padded += payload
-            steps.append((tuple(perm), int(payload), send_start, recv_start,
-                          recv_valid))
-            max_payload = max(max_payload, payload)
+        for wave in _legalize_round(transfers):
+            nb = min(bucket_rounds, len(wave))
+            for idx in np.array_split(np.arange(len(wave)), nb):
+                group = [wave[i] for i in idx]
+                if not group:
+                    continue
+                payload = max(t[2] for t in group)
+                send_start = np.zeros(p, np.int32)
+                recv_start = np.zeros(p, np.int32)
+                recv_valid = np.zeros(p, np.int32)
+                perm = []
+                for src, dst, size, start in group:
+                    perm.append((src, dst))
+                    send_start[src] = start
+                    recv_start[dst] = start
+                    recv_valid[dst] = size
+                    exact += size
+                    padded += payload
+                steps.append((tuple(perm), int(payload), send_start,
+                              recv_start, recv_valid))
+                max_payload = max(max_payload, payload)
     return tuple(steps), exact, padded, max_payload
 
 
@@ -142,6 +172,12 @@ def plan_gatherv(sizes, root: int, tree: GatherTree | None = None,
     if tree is None:
         tree = build_gather_tree(list(sizes), root=root)
     assert tree.root == root and tree.p == p
+    for e in tree.edges:
+        if e.size > 0 and e.lo < 0:
+            raise ValueError(
+                f"tree {tree.name!r} has a non-contiguous transfer "
+                "(lo=-1): the zero-copy data plane needs consecutive "
+                "block-rank ranges")
     offsets = tuple(int(x) for x in np.concatenate([[0], np.cumsum(sizes)[:-1]]))
     total = int(sum(sizes))
     cap = max(1, max(sizes))
@@ -598,49 +634,47 @@ def tree_metadata_exchange(m_local: jax.Array, axis_name: str, p: int):
 # --------------------------------------------------------------------------
 
 class RaggedGathervPlanner:
-    """Caches compiled gatherv executables keyed by bucketed size tuples.
+    """Backward-compatible shim over :class:`repro.tuner.PlannerService`.
 
-    ``quantum`` rounds every size up to a multiple, bounding the number of
-    distinct compiled programs (standard TPU raggedness bucketing).  The
-    host-side replan is O(p log p) time and 2*ceil(log2 p)-1 message rounds
-    in the cost model — negligible next to a compile or a transfer.
+    The original class cached compiled gatherv executables keyed by
+    bucketed size tuples in an UNBOUNDED dict; the service keeps the same
+    quantum-bucketing contract but bounds both the plan cache and the
+    compiled-executable cache (LRU) and counts hits/misses.  New code
+    should use ``PlannerService`` directly — it also selects the schedule
+    (TUW vs linear, bucket rounds) per calibrated (alpha, beta) and covers
+    scatterv/allgatherv/alltoallv.
     """
 
-    def __init__(self, mesh: Mesh, axis_name: str, quantum: int = 128):
+    def __init__(self, mesh: Mesh, axis_name: str, quantum: int = 128,
+                 max_plans: int = 64):
+        from repro.tuner.service import PlannerService
+
+        self._svc = PlannerService(mesh=mesh, axis_name=axis_name,
+                                   quantum=quantum,
+                                   max_cached_plans=max_plans,
+                                   max_compiled=max_plans)
         self.mesh = mesh
         self.axis = axis_name
         self.quantum = quantum
-        self._cache: dict[tuple, tuple] = {}
+
+    @property
+    def service(self):
+        return self._svc
 
     def bucketed(self, sizes) -> tuple[int, ...]:
-        q = self.quantum
-        return tuple(int(-(-s // q) * q) if s > 0 else 0 for s in sizes)
+        return self._svc.bucketed(sizes)
 
     def gatherv(self, blocks: list[np.ndarray], root: int):
-        bsizes = self.bucketed([b.shape[0] for b in blocks])
-        key = (bsizes, root, blocks[0].shape[1], str(blocks[0].dtype))
-        if key not in self._cache:
-            plan = plan_gatherv(bsizes, root)
-            fn = jax.jit(shard_map(
-                lambda xl: gatherv_shard(xl, plan, self.axis),
-                mesh=self.mesh, in_specs=P(self.axis), out_specs=P(self.axis)))
-            self._cache[key] = (plan, fn)
-        plan, fn = self._cache[key]
-        F = blocks[0].shape[1]
-        x = np.zeros((plan.p, plan.cap, F), blocks[0].dtype)
-        for i, b in enumerate(blocks):
-            x[i, : b.shape[0]] = b
-        xg = jax.device_put(x.reshape(plan.p * plan.cap, F),
-                            NamedSharding(self.mesh, P(self.axis)))
-        out = np.asarray(fn(xg)).reshape(plan.p, plan.buf_rows, F)
-        # un-bucket: slice each block back to its true size, in rank order
-        res = []
-        off = 0
-        for i, b in enumerate(blocks):
-            res.append(out[root, off: off + b.shape[0]])
-            off += bsizes[i]
-        return np.concatenate(res, axis=0), plan
+        return self._svc.gatherv(blocks, root)
 
     @property
     def cache_size(self) -> int:
-        return len(self._cache)
+        return self._svc.cache_size
+
+    @property
+    def hits(self) -> int:
+        return self._svc.plan_hits
+
+    @property
+    def misses(self) -> int:
+        return self._svc.plan_misses

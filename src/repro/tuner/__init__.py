@@ -1,0 +1,31 @@
+"""Autotuning planner service for the irregular collectives.
+
+The paper's headline is that the right algorithm is a FUNCTION of the
+machine parameters (α, β) and the size vector — ``3⌈log₂p⌉α + βΣmᵢ``
+beats fixed binomial trees in some regimes and loses to flat linear
+trees in others.  This package turns that observation into a runtime
+pipeline, the way production MPI libraries and NCCL's PAT select
+schedules:
+
+* :mod:`~repro.tuner.calibrate` — fit (α, β) per mesh/axis from
+  ping-pong + bisection micro-measurements (deterministic synthetic
+  backend for device-free tests), plus the online refit loop;
+* :mod:`~repro.tuner.candidates` — the full schedule space already
+  latent in the repo behind one :class:`Candidate` interface;
+* :mod:`~repro.tuner.select` — model-guided argmin with optional
+  measured racing and hysteresis;
+* :mod:`~repro.tuner.cache` — persistent, versioned, LRU-bounded plan
+  cache keyed by (op, p, quantized m-signature, root, dtype, mesh);
+* :mod:`~repro.tuner.service` — :class:`PlannerService`, the four ops'
+  serving front end (the old ``RaggedGathervPlanner`` is now a shim
+  over it).
+"""
+from .cache import (CACHE_VERSION, PlanCache, PlanKey,  # noqa: F401
+                    mesh_fingerprint, quantize_matrix, quantize_sizes)
+from .calibrate import (Calibration, MeshTimingBackend,  # noqa: F401
+                        OnlineCalibrator, SyntheticTimingBackend, calibrate,
+                        fit_alpha_beta)
+from .candidates import (Candidate, OPS,  # noqa: F401
+                         enumerate_candidates, plan_step_cost)
+from .select import Selection, argmin_name, select  # noqa: F401
+from .service import PlanRecord, PlannerService  # noqa: F401

@@ -1,0 +1,263 @@
+"""α–β calibration from micro-measurements (tuner stage 1).
+
+Two measurement primitives estimate the linear-transmission parameters of
+``repro.core.costmodel``:
+
+* **ping-pong** — round-trip a message of ``n`` bytes between two
+  endpoints; one direction costs ``alpha + beta * n``.  A least-squares
+  fit of time against size over a geometric size sweep yields both
+  parameters at once (the classic logP-style benchmark).
+* **bisection bandwidth** — push a single large message so the startup
+  term vanishes; ``t / n`` is a pure-β cross-check used to catch fits
+  whose β went negative or wildly off (tiny-size noise can do that).
+
+Backends supply the raw timings.  ``SyntheticTimingBackend`` is a
+deterministic model machine (seeded multiplicative noise) so calibration,
+selection, and the online-refinement loop are fully testable without
+devices; ``MeshTimingBackend`` times a real ``lax.ppermute`` exchange on a
+JAX mesh when one with >= 2 devices is available.
+
+All calibration math is in SECONDS and BYTES; ``Calibration.cost_params``
+returns a :class:`~repro.core.costmodel.CostParams` tagged accordingly,
+replacing the hardcoded constructor guesses.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.costmodel import CostParams
+
+# geometric sweep: small sizes pin alpha, large sizes pin beta
+DEFAULT_SIZES = (1_024, 4_096, 16_384, 65_536, 262_144, 1_048_576)
+
+
+def fit_alpha_beta(sizes, times) -> tuple[float, float, float]:
+    """Least-squares fit ``t = alpha + beta * n``.
+
+    Returns ``(alpha, beta, r2)``; alpha is clamped to >= 0 (a negative
+    intercept is measurement noise, not a machine property).
+    """
+    n = np.asarray(sizes, np.float64)
+    t = np.asarray(times, np.float64)
+    if n.size < 2:
+        raise ValueError("need >= 2 sizes to fit two parameters")
+    A = np.stack([np.ones_like(n), n], axis=1)
+    (alpha, beta), *_ = np.linalg.lstsq(A, t, rcond=None)
+    pred = alpha + beta * n
+    ss_res = float(((t - pred) ** 2).sum())
+    ss_tot = float(((t - t.mean()) ** 2).sum())
+    r2 = 1.0 - ss_res / ss_tot if ss_tot > 0 else 1.0
+    return max(0.0, float(alpha)), float(beta), r2
+
+
+@dataclass(frozen=True)
+class Calibration:
+    """Fitted machine parameters: SECONDS and BYTES, explicitly."""
+
+    alpha_s: float              # startup latency, seconds
+    beta_s_per_byte: float      # inverse bandwidth, seconds per byte
+    r2: float                   # fit quality of the ping-pong regression
+    n_samples: int              # measurements behind the fit
+    backend: str                # fingerprint of the measuring backend
+
+    def cost_params(self) -> CostParams:
+        p = CostParams(self.alpha_s, self.beta_s_per_byte,
+                       time_unit="s", data_unit="byte")
+        p.validate()
+        return p
+
+
+def calibrate(backend, sizes=DEFAULT_SIZES, repeats: int = 5) -> Calibration:
+    """Fit (α, β) from ``backend`` measurements.
+
+    Median-of-``repeats`` per size rejects outliers; the bisection
+    measurement at the largest size replaces a non-positive fitted β
+    (an all-noise sweep on a very fast link).
+    """
+    if repeats < 1:
+        raise ValueError("repeats >= 1")
+    med = [float(np.median([backend.ping_pong(n) for _ in range(repeats)]))
+           for n in sizes]
+    alpha, beta, r2 = fit_alpha_beta(sizes, med)
+    if beta <= 0.0:
+        big = max(sizes)
+        beta = max(1e-15, backend.bisection(big) / big)
+    return Calibration(alpha, beta, r2, len(sizes) * repeats,
+                       backend.fingerprint())
+
+
+# --------------------------------------------------------------------------
+# backends
+# --------------------------------------------------------------------------
+
+class SyntheticTimingBackend:
+    """Deterministic model machine: ``t(n) = alpha + beta * n`` with seeded
+    multiplicative noise of amplitude ``noise`` (0 => exact).
+
+    Also serves as the *measured-refinement* executor for the selector:
+    ``measure(candidate)`` evaluates the candidate's cost under the
+    backend's TRUE parameters (plus noise) — the tuner only ever sees its
+    initial guess and these observations, so tests can check the online
+    loop converges toward the truth.
+    """
+
+    def __init__(self, alpha_s: float = 1e-6,
+                 beta_s_per_byte: float = 2e-11,
+                 noise: float = 0.0, seed: int = 0):
+        if not (0.0 <= noise < 1.0):
+            raise ValueError("noise in [0, 1)")
+        self.alpha_s = float(alpha_s)
+        self.beta_s_per_byte = float(beta_s_per_byte)
+        self.noise = float(noise)
+        self._rng = np.random.default_rng(seed)
+
+    def _jitter(self) -> float:
+        if self.noise == 0.0:
+            return 1.0
+        return 1.0 + self.noise * float(self._rng.uniform(-1.0, 1.0))
+
+    def ping_pong(self, nbytes: int) -> float:
+        return (self.alpha_s + self.beta_s_per_byte * nbytes) * self._jitter()
+
+    def bisection(self, nbytes: int) -> float:
+        # large single message: startup is amortized away by construction
+        return self.beta_s_per_byte * nbytes * self._jitter()
+
+    def true_params(self) -> CostParams:
+        return CostParams(self.alpha_s, self.beta_s_per_byte,
+                          time_unit="s", data_unit="byte")
+
+    def measure(self, candidate, row_bytes: int = 1) -> float:
+        """Noisy execution time of a Candidate on the true machine.
+
+        ``row_bytes`` converts candidates whose cost weights are in rows
+        (the PlannerService dataplane view) into bytes; candidates already
+        costed in the backend's data unit use the default 1.  A real
+        executor would ignore it — wall time needs no unit help.
+        """
+        na, nb = candidate.alpha_beta_weights()
+        return (na * self.alpha_s
+                + nb * row_bytes * self.beta_s_per_byte) * self._jitter()
+
+    def fingerprint(self) -> str:
+        return (f"synthetic(alpha={self.alpha_s:.3e},"
+                f"beta={self.beta_s_per_byte:.3e},noise={self.noise})")
+
+
+class MeshTimingBackend:
+    """Time a real ``lax.ppermute`` pair exchange on a JAX mesh.
+
+    Best-effort device calibration: requires >= 2 devices on the mesh
+    axis.  Each ``ping_pong`` jits a 0<->1 exchange of ``n`` bytes,
+    discards one warmup (compile), and returns the per-direction time.
+    """
+
+    def __init__(self, mesh, axis_name: str):
+        import jax  # deferred: cost-model-only users never import jax
+
+        self.mesh = mesh
+        self.axis = axis_name
+        self._jax = jax
+        axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))[axis_name]
+        if axis_size < 2:
+            raise RuntimeError("MeshTimingBackend needs >= 2 devices on "
+                               f"axis {axis_name!r} (got {axis_size})")
+        self._p = int(axis_size)
+
+    def _exchange_time(self, nbytes: int, round_trips: int) -> float:
+        import time
+
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.compat import shard_map
+
+        rows = max(1, nbytes // 4)  # float32 rows of width 1
+
+        def body(x):
+            perm = [(0, 1), (1, 0)]
+            for _ in range(round_trips):
+                x = jax.lax.ppermute(x, self.axis, perm)
+            return x
+
+        fn = jax.jit(shard_map(body, mesh=self.mesh,
+                               in_specs=P(self.axis), out_specs=P(self.axis)))
+        x = jax.device_put(
+            jnp.zeros((self._p * rows, 1), jnp.float32),
+            NamedSharding(self.mesh, P(self.axis)))
+        fn(x).block_until_ready()  # warmup / compile
+        t0 = time.perf_counter()
+        fn(x).block_until_ready()
+        dt = time.perf_counter() - t0
+        return dt / (2 * round_trips)  # per direction
+
+    def ping_pong(self, nbytes: int) -> float:
+        return self._exchange_time(nbytes, round_trips=5)
+
+    def bisection(self, nbytes: int) -> float:
+        return self._exchange_time(nbytes, round_trips=1)
+
+    def fingerprint(self) -> str:
+        dev = self.mesh.devices.flat[0]
+        return f"mesh({dev.platform},p={self._p},axis={self.axis})"
+
+
+# --------------------------------------------------------------------------
+# online refinement
+# --------------------------------------------------------------------------
+
+class OnlineCalibrator:
+    """Sharpen (α, β) from measured candidate races (tuner stage 3).
+
+    Every simulated cost in this codebase is piecewise linear and
+    homogeneous in (α, β): for the critical path a candidate settles on,
+    ``t = n_alpha * alpha + n_beta * beta``.  The selector records each
+    measured race as the observation ``(n_alpha, n_beta, seconds)``; this
+    class keeps the running normal equations and refits on demand, with
+    the initial calibration as a ridge prior (weight ``prior_weight``
+    pseudo-observations at representative scales) so a handful of noisy
+    races cannot fling the estimate.
+    """
+
+    def __init__(self, prior: Calibration, prior_weight: float = 4.0):
+        if prior_weight < 0:
+            raise ValueError("prior_weight >= 0")
+        self.prior = prior
+        self.prior_weight = float(prior_weight)
+        self._obs: list[tuple[float, float, float]] = []
+
+    @property
+    def n_observations(self) -> int:
+        return len(self._obs)
+
+    def observe(self, n_alpha: float, n_beta: float, seconds: float) -> None:
+        if seconds < 0 or not math.isfinite(seconds):
+            raise ValueError(f"bad measurement: {seconds}")
+        self._obs.append((float(n_alpha), float(n_beta), float(seconds)))
+
+    def fitted(self) -> Calibration:
+        """Solve the 2-parameter least squares with the ridge prior."""
+        rows = list(self._obs)
+        w = self.prior_weight
+        if w > 0:
+            # ridge as pseudo-observations: sqrt(w) x the MEAN coefficient
+            # scale, so the prior carries about w observations' worth of
+            # leverage at a typical magnitude (max-scaled rows would square
+            # into the loss and drown real measurements)
+            s = math.sqrt(w)
+            na_scale = (np.mean([r[0] for r in rows]) if rows else 1.0) or 1.0
+            nb_scale = (np.mean([r[1] for r in rows]) if rows else 1.0) or 1.0
+            rows.append((s * na_scale, 0.0, s * na_scale * self.prior.alpha_s))
+            rows.append((0.0, s * nb_scale,
+                         s * nb_scale * self.prior.beta_s_per_byte))
+        A = np.asarray([[r[0], r[1]] for r in rows], np.float64)
+        t = np.asarray([r[2] for r in rows], np.float64)
+        (alpha, beta), *_ = np.linalg.lstsq(A, t, rcond=None)
+        return Calibration(
+            max(0.0, float(alpha)), max(1e-15, float(beta)),
+            r2=self.prior.r2, n_samples=self.prior.n_samples + len(self._obs),
+            backend=self.prior.backend + "+online")

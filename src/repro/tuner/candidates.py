@@ -1,0 +1,240 @@
+"""Candidate enumeration: the full schedule space behind one interface
+(tuner stage 2).
+
+Everything the repo can already build or simulate becomes a
+:class:`Candidate` — a named, lazily-built plan plus its cost as a
+function of :class:`~repro.core.costmodel.CostParams`.  Two cost views:
+
+* ``view="model"`` — the paper's point-to-point α-β simulators
+  (``simulate_gather`` and friends) over the whole algorithm zoo: TUW
+  tree (overlapped construction), binomial / k-nomial / linear /
+  two-level baselines, graceful degradation, and (behind
+  ``include_extensions``) k-ported and segmented variants.  This is the
+  view benchmarks and the paper's crossover analysis use.
+* ``view="dataplane"`` — the padded round-synchronous cost of the
+  *lowered* ppermute plans (one ``alpha + beta * payload`` per step),
+  restricted to candidates the zero-copy SPMD executor can actually run
+  (contiguous-range trees; ``bucket_rounds`` variants).  This is the view
+  :class:`~repro.tuner.service.PlannerService` selects with, so the
+  winner is always executable.
+
+Every cost function is piecewise linear and homogeneous in (α, β);
+``Candidate.alpha_beta_weights`` extracts the active critical path's
+coefficients by evaluating at unit parameters — the selector's online
+calibration loop feeds on exactly those weights.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+from repro.core import baselines
+from repro.core import extensions as ext
+from repro.core.composed import allgatherv_schedule, alltoallv_schedule
+from repro.core.costmodel import CostParams, simulate_gather, simulate_scatter
+from repro.core.treegather import (GatherTree, build_gather_tree,
+                                   construction_alpha_rounds)
+
+OPS = ("gatherv", "scatterv", "allgatherv", "alltoallv")
+
+
+@dataclass(frozen=True)
+class Candidate:
+    """One selectable schedule: name, lazy plan, parametric cost."""
+
+    name: str
+    op: str
+    executable: bool                      # SPMD data plane can run it
+    cost_fn: Callable[[CostParams], float] = field(repr=False)
+    builder: Callable[[], object] = field(repr=False)  # tree/schedule/plan
+    bytes_exact: int = 0
+    bucket_rounds: int = 1
+
+    def cost(self, params: CostParams) -> float:
+        params.validate()
+        return float(self.cost_fn(params))
+
+    def alpha_beta_weights(self) -> tuple[float, float]:
+        """(n_alpha, n_beta) of the critical path at unit parameters."""
+        units = CostParams(1.0, 0.0), CostParams(0.0, 1.0)
+        return self.cost_fn(units[0]), self.cost_fn(units[1])
+
+    def build(self):
+        return self.builder()
+
+
+def plan_step_cost(plan, params: CostParams, congestion: float = 1.0) -> float:
+    """Round-synchronous cost of a lowered plan with a shared-fabric term.
+
+    Each ppermute step is a padded permutation: its critical transfer
+    costs ``alpha + beta * payload``.  The remaining concurrent padded
+    traffic is not free on a real fabric — transfers share links — so the
+    extra ``(npairs - 1) * payload`` padded rows are amortized over the
+    ``p`` per-device links and charged at ``congestion`` strength (0 =
+    fully-connected fabric, concurrency is free and bucket-1 always wins;
+    1 = each extra transfer consumes a fair 1/p link share).  This is the
+    term that makes ``bucket_rounds`` a real trade-off: splitting a round
+    into size buckets pays extra startups to stop small transfers from
+    being padded to the round maximum.
+    """
+    params.validate()
+    total = 0.0
+    for perm, payload, *_rest in plan.steps:
+        spill = (len(perm) - 1) * payload / plan.p
+        total += params.alpha + params.beta * (payload + congestion * spill)
+    return total
+
+
+def _tree_candidate(name: str, op: str, tree: GatherTree,
+                    cost_fn: Callable[[CostParams], float],
+                    executable: bool | None = None) -> Candidate:
+    if executable is None:
+        executable = tree.contiguous and all(
+            e.lo >= 0 for e in tree.edges if e.size > 0)
+    return Candidate(name, op, executable, cost_fn, lambda: tree,
+                     bytes_exact=tree.total_bytes_moved())
+
+
+# --------------------------------------------------------------------------
+# rooted ops: gatherv / scatterv
+# --------------------------------------------------------------------------
+
+def rooted_model_candidates(op: str, m, root: int, params: CostParams,
+                            include_extensions: bool = False
+                            ) -> list[Candidate]:
+    """Point-to-point α-β view of the gatherv/scatterv algorithm zoo.
+
+    The TUW candidates carry their construction cost (overlapped gating
+    for gatherv, serial ``(2D-1) * alpha`` for scatterv and the exotic
+    variants); the oblivious baselines are construction-free — that
+    asymmetry IS the paper's crossover.
+    """
+    if op not in ("gatherv", "scatterv"):
+        raise ValueError(op)
+    m = [int(x) for x in m]
+    p = len(m)
+    constr = construction_alpha_rounds(p)
+
+    def sim(tree):
+        if op == "gatherv":
+            return lambda P: ext.simulate_gather_overlapped_construction(
+                tree, P)
+        return lambda P: simulate_scatter(tree, P) + constr * P.alpha
+
+    def sim_plain(tree):
+        if op == "gatherv":
+            return lambda P: simulate_gather(tree, P)
+        return lambda P: simulate_scatter(tree, P)
+
+    tuw = build_gather_tree(m, root=root)
+    zoo = [
+        ("binomial", baselines.binomial_tree(m, root)),
+        ("knomial3", baselines.knomial_tree(m, root, 3)),
+        ("linear", baselines.linear_tree(m, root)),
+        ("two_level", baselines.two_level_tree(m, root, 16)),
+    ]
+    out = [_tree_candidate("tuw", op, tuw, sim(tuw))]
+    out += [_tree_candidate(name, op, tree, sim_plain(tree))
+            for name, tree in zoo]
+    thr = ext.auto_threshold(m, params) if params.beta > 0 else None
+    if thr is not None:
+        deg = build_gather_tree(m, root=root, degrade_threshold=thr)
+        if not deg.contiguous:  # a seal actually triggered: differs from tuw
+            out.append(_tree_candidate(f"tuw_degrade({thr})", op, deg,
+                                       sim(deg), executable=False))
+    if include_extensions:
+        kp = ext.build_kported_tree(m, 2, root=root)
+        out.append(_tree_candidate(
+            "tuw_kported2", op, kp,
+            lambda P: (ext.simulate_gather_kported(kp, P, 2)
+                       + constr * P.alpha),
+            executable=False))
+        seg = max(1, max(m) // 8)
+        out.append(_tree_candidate(
+            f"tuw_segmented({seg})", op, tuw,
+            lambda P: (ext.simulate_gather_segmented(tuw, m, P, seg)
+                       + constr * P.alpha),
+            executable=False))
+    return out
+
+
+def rooted_dataplane_candidates(op: str, m, root: int,
+                                buckets=(1, 2, 4)) -> list[Candidate]:
+    """Lowered-plan view: only executable schedules, costed by their padded
+    ppermute steps.  The linear tree legalizes into serialized waves, so
+    its step count (p-1 startups) is faithfully represented."""
+    from repro.core.jax_collectives import plan_gatherv
+
+    if op not in ("gatherv", "scatterv"):
+        raise ValueError(op)
+    m = [int(x) for x in m]
+    tuw = build_gather_tree(m, root=root)
+    lin = baselines.linear_tree(m, root)
+    out = []
+    for tree, base in ((tuw, "tuw"), (lin, "linear")):
+        for b in buckets if tree is tuw else (1,):
+            plan = plan_gatherv(m, root, tree=tree, bucket_rounds=b)
+            out.append(Candidate(
+                f"{base}(b={b})", op, True,
+                cost_fn=lambda P, pl=plan: plan_step_cost(pl, P),
+                builder=lambda pl=plan: pl,
+                bytes_exact=plan.tree_bytes_exact, bucket_rounds=b))
+    return out
+
+
+# --------------------------------------------------------------------------
+# composed ops: allgatherv / alltoallv
+# --------------------------------------------------------------------------
+
+def composed_dataplane_candidates(op: str, arg, root: int | None = None,
+                                  buckets=(1, 2, 4)) -> list[Candidate]:
+    """``bucket_rounds`` variants of the composed TUW schedules, costed on
+    their lowered plans.  Bucketing trades startups (more ppermutes) for
+    padding (smaller payloads) — a pure α-β tradeoff the selector decides
+    per regime.  The schedule is built once and shared across variants.
+    """
+    from repro.core.jax_collectives import plan_allgatherv, plan_alltoallv
+
+    if op == "allgatherv":
+        schedule = allgatherv_schedule([int(x) for x in arg], root=root)
+        lower = lambda b: plan_allgatherv(arg, root=root, bucket_rounds=b,
+                                          schedule=schedule)
+    elif op == "alltoallv":
+        schedule = alltoallv_schedule(np.asarray(arg, np.int64))
+        lower = lambda b: plan_alltoallv(arg, bucket_rounds=b,
+                                         schedule=schedule)
+    else:
+        raise ValueError(op)
+    out = []
+    for b in buckets:
+        plan = lower(b)
+        out.append(Candidate(
+            f"tuw_composed(b={b})", op, True,
+            cost_fn=lambda P, pl=plan: plan_step_cost(pl, P),
+            builder=lambda pl=plan: pl,
+            bytes_exact=plan.tree_bytes_exact, bucket_rounds=b))
+    return out
+
+
+def enumerate_candidates(op: str, arg, root: int | None,
+                         params: CostParams, view: str = "model",
+                         include_extensions: bool = False,
+                         buckets=(1, 2, 4)) -> list[Candidate]:
+    """All candidates for one problem.  ``arg`` is the size vector (rooted
+    and allgatherv ops) or the p x p size matrix (alltoallv)."""
+    if op not in OPS:
+        raise ValueError(f"unknown op {op!r}; expected one of {OPS}")
+    if view not in ("model", "dataplane"):
+        raise ValueError(view)
+    if op in ("gatherv", "scatterv"):
+        if root is None:
+            raise ValueError(f"{op} needs a root")
+        if view == "model":
+            return rooted_model_candidates(op, arg, root, params,
+                                           include_extensions)
+        return rooted_dataplane_candidates(op, arg, root, buckets)
+    # composed ops have a single machine view: the schedule IS the
+    # round-synchronous data plane (simulate_composed == bucket-1 steps)
+    return composed_dataplane_candidates(op, arg, root=root, buckets=buckets)

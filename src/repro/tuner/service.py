@@ -1,0 +1,357 @@
+"""PlannerService: the calibrate → enumerate → select → cache pipeline as
+one serving-shaped object covering gatherv / scatterv / allgatherv /
+alltoallv.
+
+A service instance owns
+
+* the calibrated :class:`~repro.core.costmodel.CostParams` (from a
+  :class:`~repro.tuner.calibrate.Calibration`, or the ``tpu_ici``
+  SI-units default),
+* a :class:`~repro.tuner.cache.PlanCache` (persistent when ``cache_dir``
+  is given) of *lowered* plans keyed by (op, p, quantized m-signature,
+  root, dtype, mesh fingerprint),
+* a bounded LRU of compiled shard_map executables (mesh required), and
+* optionally a measurement loop: a ``measure`` callable races the top-k
+  candidates and an :class:`~repro.tuner.calibrate.OnlineCalibrator`
+  refits (α, β) from the observations after every race.
+
+Planning works without any devices (``mesh=None``): ``plan``/
+``plan_record`` select among the *executable* data-plane candidates under
+the calibrated parameters and return the lowered plan.  Sizes quantize to
+``quantum`` multiples first, so an adversarial stream of ragged sizes
+maps onto a bounded set of signatures (and the MoE dispatch path replans
+in O(1) once warm — see ``benchmarks/tuner_bench.py``).
+
+Selection costs are computed in BYTES: row counts are scaled by
+``row_bytes`` (feature width x itemsize) so the α-vs-β balance — which
+decides e.g. how many bucket rounds pay off — is physical, not
+row-count-relative.
+"""
+from __future__ import annotations
+
+import uuid
+from collections import OrderedDict
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.costmodel import CostParams
+
+from .cache import (PlanCache, PlanKey, mesh_fingerprint, quantize_matrix,
+                    quantize_sizes)
+from .calibrate import Calibration, OnlineCalibrator
+from .candidates import OPS, enumerate_candidates
+from .select import Selection, select
+
+
+@dataclass(frozen=True)
+class PlanRecord:
+    """What the cache stores: the lowered plan plus how it was chosen.
+
+    ``serial`` is a globally unique id minted when the record is created;
+    compiled executables are keyed by it, so a re-planned signature (after
+    eviction, with possibly different selection) can never execute a stale
+    schedule compiled for the old plan.
+    """
+
+    op: str
+    plan: object                           # GathervPlan | ComposedPlan
+    algo: str                              # winning candidate name
+    costs: tuple[tuple[str, float], ...]   # full scoreboard at plan time
+    serial: str = ""
+
+
+class _RowScaledCalibrator:
+    """Adapter: dataplane candidate weights are in ROWS of the current
+    problem; the calibrator's ledger is in BYTES.  Scale n_beta up by the
+    row width before recording, so the fitted beta stays seconds-per-byte
+    instead of compounding row_bytes on every refit."""
+
+    def __init__(self, inner: OnlineCalibrator, row_bytes: int):
+        self._inner = inner
+        self._row_bytes = int(row_bytes)
+
+    def observe(self, n_alpha: float, n_beta: float, seconds: float) -> None:
+        self._inner.observe(n_alpha, n_beta * self._row_bytes, seconds)
+
+
+class PlannerService:
+    """Autotuned, cached planning (and execution) for irregular collectives.
+
+    ``mesh=None`` gives a plan-only service (benchmarks, tests without
+    devices); with a mesh, ``gatherv``/``scatterv``/``allgatherv``/
+    ``alltoallv`` execute through cached compiled executables exactly like
+    the old ``RaggedGathervPlanner`` did for gatherv alone.
+    """
+
+    def __init__(self, mesh=None, axis_name: str = "x", quantum: int = 128,
+                 calibration: Calibration | None = None,
+                 params: CostParams | None = None,
+                 cache: PlanCache | None = None,
+                 cache_dir: str | None = None,
+                 max_cached_plans: int = 256,
+                 max_compiled: int = 64,
+                 buckets=(1, 2, 4),
+                 hysteresis: float = 0.05,
+                 measure=None, top_k: int = 3,
+                 calibrator: OnlineCalibrator | None = None):
+        if params is not None and calibration is not None:
+            params.require_compatible(calibration.cost_params())
+        self.mesh = mesh
+        self.axis = axis_name
+        self.quantum = int(quantum)
+        self.params = (params if params is not None
+                       else (calibration.cost_params() if calibration
+                             else CostParams.tpu_ici()))
+        self.params.validate()
+        self.cache = cache if cache is not None else PlanCache(
+            cache_dir, max_entries=max_cached_plans)
+        self.buckets = tuple(buckets)
+        self.hysteresis = float(hysteresis)
+        self.measure = measure
+        self.top_k = int(top_k)
+        self.calibrator = calibrator
+        if calibrator is not None:
+            # the refit loop rewrites self.params from the calibrator, so
+            # the starting params must already be in its units (s, bytes)
+            self.params.require_compatible(calibrator.prior.cost_params())
+        # key token -> algo name; LRU-bounded alongside the plan cache
+        self._incumbent: OrderedDict[str, str] = OrderedDict()
+        self._compiled: OrderedDict[tuple, object] = OrderedDict()
+        self.max_compiled = int(max_compiled)
+        self.compiled_hits = 0
+        self.compiled_misses = 0
+        self.last_selection: Selection | None = None
+
+    # ------------------------------------------------------------ planning
+
+    def bucketed(self, sizes) -> tuple[int, ...]:
+        return quantize_sizes(sizes, self.quantum)
+
+    def _key(self, op: str, arg, root: int | None, dtype: str,
+             row_bytes: int) -> PlanKey:
+        if op == "alltoallv":
+            sig = quantize_matrix(arg, self.quantum)
+            p = len(sig)
+        else:
+            sig = quantize_sizes(arg, self.quantum)
+            p = len(sig)
+        return PlanKey(op, p, sig, -1 if root is None else int(root),
+                       f"{dtype}r{int(row_bytes)}", mesh_fingerprint(self.mesh))
+
+    def plan_record(self, op: str, arg, root: int | None = None,
+                    dtype: str = "float32", row_bytes: int = 1) -> PlanRecord:
+        """Cached plan for one problem; a miss runs enumerate + select +
+        lower and stores the result (write-through when persistent)."""
+        if op not in OPS:
+            raise ValueError(f"unknown op {op!r}")
+        if op in ("gatherv", "scatterv") and root is None:
+            raise ValueError(f"{op} needs a root")
+        key = self._key(op, arg, root, dtype, row_bytes)
+        rec = self.cache.get(key)
+        if rec is not None:
+            return rec
+        qarg = key.signature
+        # selection params in bytes: scale the per-row β by the row width
+        sel_params = CostParams(self.params.alpha,
+                                self.params.beta * max(1, int(row_bytes)),
+                                self.params.time_unit, "row")
+        cands = enumerate_candidates(op, qarg, root, sel_params,
+                                     view="dataplane", buckets=self.buckets)
+        rb = max(1, int(row_bytes))
+        cal = self.calibrator
+        if cal is not None:
+            cal = _RowScaledCalibrator(cal, rb)
+        # measure contract: measure(candidate, row_bytes=...) -> seconds;
+        # dataplane candidate weights are in rows, so the executor gets the
+        # row width (a wall-clock executor is free to ignore it)
+        meas = self.measure
+        if meas is not None:
+            meas = (lambda c, _m=self.measure, _rb=rb:
+                    _m(c, row_bytes=_rb))
+        # hysteresis incumbent is per SIGNATURE: it stabilizes re-planning
+        # of the same problem (post-eviction, refitted params) and never
+        # biases a brand-new problem away from its argmin
+        token = key.token()
+        sel = select(cands, sel_params, previous=self._incumbent.get(token),
+                     hysteresis=self.hysteresis, measure=meas,
+                     top_k=self.top_k, calibrator=cal)
+        self.last_selection = sel
+        self._incumbent[token] = sel.chosen
+        self._incumbent.move_to_end(token)
+        while len(self._incumbent) > self.cache.max_entries:
+            self._incumbent.popitem(last=False)  # bounded like the plan cache
+        if self.calibrator is not None and sel.measured:
+            # online loop: the next selection uses the sharpened fit
+            self.params = self.calibrator.fitted().cost_params()
+        rec = PlanRecord(op=op, plan=sel.candidate(cands).build(),
+                         algo=sel.chosen, costs=sel.costs,
+                         serial=uuid.uuid4().hex)
+        self.cache.put(key, rec)
+        return rec
+
+    def plan(self, op: str, arg, root: int | None = None,
+             dtype: str = "float32", row_bytes: int = 1):
+        return self.plan_record(op, arg, root, dtype, row_bytes).plan
+
+    @property
+    def plan_hits(self) -> int:
+        return self.cache.hits
+
+    @property
+    def plan_misses(self) -> int:
+        return self.cache.misses
+
+    @property
+    def cache_size(self) -> int:
+        """Number of cached compiled executables (shim compatibility)."""
+        return len(self._compiled)
+
+    # ----------------------------------------------------------- execution
+
+    def _require_mesh(self, p: int):
+        if self.mesh is None:
+            raise RuntimeError("execution needs a mesh; this PlannerService "
+                               "is plan-only (mesh=None)")
+        if p != self.mesh.devices.size:
+            raise ValueError(f"problem over {p} ranks on a "
+                             f"{self.mesh.devices.size}-device mesh")
+
+    def _compiled_fn(self, kind: str, rec: PlanRecord, F: int,
+                     dtype_str: str):
+        import jax
+        from jax.sharding import PartitionSpec as P
+
+        from repro.compat import shard_map
+        from repro.core import jax_collectives as jc
+
+        plan = rec.plan
+        ckey = (rec.serial, kind, F, dtype_str)
+        fn = self._compiled.get(ckey)
+        if fn is not None:
+            self._compiled.move_to_end(ckey)
+            self.compiled_hits += 1
+            return fn
+        self.compiled_misses += 1
+        body = {"gatherv": jc.gatherv_shard, "scatterv": jc.scatterv_shard,
+                "allgatherv": jc.allgatherv_shard,
+                "alltoallv": jc.alltoallv_shard}[kind]
+        fn = jax.jit(shard_map(
+            lambda xl: body(xl, plan, self.axis),
+            mesh=self.mesh, in_specs=P(self.axis), out_specs=P(self.axis)))
+        self._compiled[ckey] = fn
+        while len(self._compiled) > self.max_compiled:
+            self._compiled.popitem(last=False)
+        return fn
+
+    def _put(self, x):
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        return jax.device_put(x, NamedSharding(self.mesh, P(self.axis)))
+
+    def gatherv(self, blocks: list[np.ndarray], root: int):
+        """Gather ragged blocks to ``root``; returns (result, plan) — the
+        result rows are the true (unquantized) blocks in rank order."""
+        sizes = [int(b.shape[0]) for b in blocks]
+        self._require_mesh(len(blocks))
+        F = int(blocks[0].shape[1])
+        dt = blocks[0].dtype
+        rec = self.plan_record("gatherv", sizes, root=root, dtype=str(dt),
+                               row_bytes=F * dt.itemsize)
+        plan = rec.plan
+        fn = self._compiled_fn("gatherv", rec, F, str(dt))
+        x = np.zeros((plan.p, plan.cap, F), dt)
+        for i, b in enumerate(blocks):
+            x[i, : sizes[i]] = b
+        out = np.asarray(fn(self._put(x.reshape(plan.p * plan.cap, F))))
+        out = out.reshape(plan.p, plan.buf_rows, F)
+        res, off = [], 0
+        for i, s in enumerate(sizes):
+            res.append(out[root, off: off + s])
+            off += plan.sizes[i]          # quantized stride
+        return np.concatenate(res, axis=0), plan
+
+    def scatterv(self, data: np.ndarray, sizes, root: int):
+        """Scatter rank-ordered rows of ``data`` into ragged blocks;
+        returns (list of (n_i, F) blocks, plan)."""
+        sizes = [int(s) for s in sizes]
+        self._require_mesh(len(sizes))
+        F = int(data.shape[1])
+        dt = data.dtype
+        rec = self.plan_record("scatterv", sizes, root=root, dtype=str(dt),
+                               row_bytes=F * dt.itemsize)
+        plan = rec.plan
+        fn = self._compiled_fn("scatterv", rec, F, str(dt))
+        xin = np.zeros((plan.p, plan.buf_rows, F), dt)
+        off_true, off_q = 0, 0
+        for i, s in enumerate(sizes):
+            xin[root, off_q: off_q + s] = data[off_true: off_true + s]
+            off_true += s
+            off_q += plan.sizes[i]
+        out = np.asarray(fn(self._put(xin.reshape(plan.p * plan.buf_rows, F))))
+        out = out.reshape(plan.p, plan.cap, F)
+        return [out[i, : sizes[i]] for i in range(plan.p)], plan
+
+    def allgatherv(self, blocks: list[np.ndarray], root: int | None = None):
+        """Every device ends with all true blocks in rank order; returns
+        ((p, sum(sizes), F) array, plan)."""
+        sizes = [int(b.shape[0]) for b in blocks]
+        self._require_mesh(len(blocks))
+        F = int(blocks[0].shape[1])
+        dt = blocks[0].dtype
+        rec = self.plan_record("allgatherv", sizes, root=root, dtype=str(dt),
+                               row_bytes=F * dt.itemsize)
+        plan = rec.plan
+        fn = self._compiled_fn("allgatherv", rec, F, str(dt))
+        x = np.zeros((plan.p, plan.cap, F), dt)
+        for i, b in enumerate(blocks):
+            x[i, : sizes[i]] = b
+        out = np.asarray(fn(self._put(x.reshape(plan.p * plan.cap, F))))
+        out = out.reshape(plan.p, plan.buf_rows, F)
+        keep = []
+        for i, s in enumerate(sizes):
+            start = plan.in_starts[i]     # quantized offsets
+            keep.append(out[:, start: start + s])
+        return np.concatenate(keep, axis=1), plan
+
+    def alltoallv(self, blocks: list[list[np.ndarray]]):
+        """``blocks[i][j]``: block rank i sends to rank j.  Returns (list of
+        per-device received buffers — device j's is ``concat_i blocks[i][j]``
+        — and the plan)."""
+        p = len(blocks)
+        self._require_mesh(p)
+        S = [[int(b.shape[0]) for b in row] for row in blocks]
+        F = int(blocks[0][0].shape[1])
+        dt = blocks[0][0].dtype
+        rec = self.plan_record("alltoallv", S, dtype=str(dt),
+                               row_bytes=F * dt.itemsize)
+        plan = rec.plan
+        fn = self._compiled_fn("alltoallv", rec, F, str(dt))
+        Sq = np.asarray(quantize_matrix(S, self.quantum), np.int64)
+        x = np.zeros((p, plan.cap, F), dt)
+        for i, row in enumerate(blocks):
+            off = 0
+            for j, b in enumerate(row):
+                x[i, off: off + S[i][j]] = b
+                off += Sq[i, j]
+        out = np.asarray(fn(self._put(x.reshape(p * plan.cap, F))))
+        out = out.reshape(p, plan.out_rows, F)
+        res = []
+        for j in range(p):
+            parts, off = [], 0
+            for i in range(p):
+                parts.append(out[j, off: off + S[i][j]])
+                off += Sq[i, j]
+            res.append(np.concatenate(parts, axis=0) if parts
+                       else out[j, :0])
+        return res, plan
+
+    @property
+    def stats(self) -> dict:
+        return {**self.cache.stats,
+                "compiled": len(self._compiled),
+                "compiled_hits": self.compiled_hits,
+                "compiled_misses": self.compiled_misses,
+                "params": (self.params.alpha, self.params.beta,
+                           self.params.time_unit, self.params.data_unit)}

@@ -1,0 +1,239 @@
+"""Tuner subsystem tests: α-β calibration, candidate enumeration,
+selection (argmin + crossover + hysteresis + online refinement), and the
+persistent plan cache (byte-identical round-trips, LRU eviction)."""
+import json
+import os
+import pickle
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.costmodel import CostParams
+from repro.core.distributions import NAMES, block_sizes
+from repro.tuner import (Calibration, OnlineCalibrator, PlanCache, PlanKey,
+                         SyntheticTimingBackend, argmin_name, calibrate,
+                         enumerate_candidates, quantize_sizes, select)
+
+QDR = CostParams.infiniband_qdr()
+
+
+# --------------------------------------------------------------- calibration
+
+def test_calibration_exact_recovery_without_noise():
+    b = SyntheticTimingBackend(alpha_s=3e-6, beta_s_per_byte=5e-11, noise=0.0)
+    cal = calibrate(b)
+    assert cal.alpha_s == pytest.approx(3e-6, rel=1e-6)
+    assert cal.beta_s_per_byte == pytest.approx(5e-11, rel=1e-6)
+    assert cal.r2 == pytest.approx(1.0, abs=1e-9)
+    p = cal.cost_params()
+    assert (p.time_unit, p.data_unit) == ("s", "byte")
+
+
+def test_calibration_tolerates_noise():
+    b = SyntheticTimingBackend(alpha_s=3e-6, beta_s_per_byte=5e-11,
+                               noise=0.05, seed=1)
+    cal = calibrate(b)
+    assert cal.alpha_s == pytest.approx(3e-6, rel=0.25)
+    assert cal.beta_s_per_byte == pytest.approx(5e-11, rel=0.1)
+
+
+def test_online_calibrator_converges_toward_truth():
+    # prior is off by 4x in alpha, 3x in beta; observations come from the
+    # true machine — the refit must land much closer to the truth
+    true_a, true_b = 2e-6, 6e-11
+    prior = Calibration(8e-6, 2e-11, r2=1.0, n_samples=1, backend="test")
+    oc = OnlineCalibrator(prior, prior_weight=1.0)
+    rng = np.random.default_rng(0)
+    for _ in range(40):
+        na = float(rng.integers(1, 200))
+        nb = float(rng.integers(1_000, 5_000_000))
+        oc.observe(na, nb, na * true_a + nb * true_b)
+    fit = oc.fitted()
+    assert fit.alpha_s == pytest.approx(true_a, rel=0.25)
+    assert fit.beta_s_per_byte == pytest.approx(true_b, rel=0.25)
+    # decisively closer than the prior on both parameters
+    assert abs(fit.alpha_s - true_a) < abs(prior.alpha_s - true_a) / 4
+    assert (abs(fit.beta_s_per_byte - true_b)
+            < abs(prior.beta_s_per_byte - true_b) / 4)
+
+
+def test_costparams_unit_story():
+    ici = CostParams.tpu_ici()
+    assert (ici.time_unit, ici.data_unit) == ("s", "byte")
+    us = ici.to_us()
+    assert us.alpha == pytest.approx(1.0)           # 1 us per hop
+    assert us.beta == pytest.approx(2e-5)           # us per byte at 50 GB/s
+    with pytest.raises(ValueError):
+        ici.require_compatible(QDR)
+    with pytest.raises(ValueError):
+        CostParams(float("nan"), 1.0).validate()
+    with pytest.raises(ValueError):
+        CostParams(-1.0, 1.0).validate()
+
+
+# ----------------------------------------------------------------- selection
+
+PARAM_GRID = [
+    CostParams(1.8, 1.4e-3), CostParams(50.0, 1e-3),
+    CostParams(0.0, 1.0), CostParams(1.0, 0.0), CostParams(1.0, 1.0),
+]
+
+
+@given(st.sampled_from(NAMES), st.integers(min_value=2, max_value=70),
+       st.integers(min_value=0, max_value=1000),
+       st.integers(min_value=0, max_value=len(PARAM_GRID) - 1))
+@settings(max_examples=40, deadline=None)
+def test_selection_is_argmin_without_measurement(name, p, seed, pidx):
+    """ISSUE property (a): with measurement disabled, select == argmin of
+    simulated cost, over the full model-view zoo."""
+    m = block_sizes(name, p, 64, seed=seed % 7)
+    root = seed % p
+    params = PARAM_GRID[pidx]
+    cands = enumerate_candidates("gatherv", m, root, params, view="model")
+    sel = select(cands, params)
+    assert sel.chosen == argmin_name(cands, params)
+    assert sel.cost == min(c for _, c in sel.costs)
+    assert sel.measured is None and not sel.kept_previous
+
+
+def test_crossover_uniform_m_prefers_binomial():
+    """ISSUE property (b), uniform side: on regular block sizes the TUW and
+    binomial trees move the same bytes, so the oblivious binomial tree —
+    which pays no construction latency — must win, and by no more than
+    the construction alpha overhead (Theorem 1's 3D vs D rounds)."""
+    from repro.core.treegather import ceil_log2
+
+    for b in (10, 10_000):
+        m = block_sizes("same", 64, b)
+        cands = enumerate_candidates("gatherv", m, 0, QDR, view="model")
+        sel = select(cands, QDR)
+        assert sel.chosen == "binomial", sel.costs
+        costs = dict(sel.costs)
+        gap = costs["tuw"] - costs["binomial"]
+        assert 0 < gap <= 2 * ceil_log2(64) * QDR.alpha + 1e-9
+
+
+def test_crossover_skewed_m_prefers_tuw_family():
+    """ISSUE property (b), irregular side: the paper's §1 worst case (one
+    large block far from the root) makes the binomial tree forward it
+    ceil(log2 p) times — size-aware TUW-family schedules must win for
+    bandwidth-dominated parameters."""
+    m = [0] * 64
+    m[63] = 200_000
+    cands = enumerate_candidates("gatherv", m, 0, QDR, view="model")
+    costs = dict(select(cands, QDR).costs)
+    tuw_family = min(v for k, v in costs.items() if k.startswith("tuw"))
+    assert tuw_family < costs["binomial"] / 3
+    # spikes: multiple oversized cubes; degradation seals them root-ward
+    m2 = block_sizes("spikes", 64, 10_000, seed=1)
+    sel2 = select(enumerate_candidates("gatherv", m2, 0, QDR, view="model"),
+                  QDR)
+    assert sel2.chosen.startswith("tuw"), sel2.costs
+
+
+def test_hysteresis_keeps_incumbent_within_margin():
+    m = block_sizes("same", 64, 100)
+    cands = enumerate_candidates("gatherv", m, 0, QDR, view="model")
+    sel = select(cands, QDR)
+    runner_up = sel.costs[1][0]
+    # the winner switches only when cheaper than incumbent * (1 - h)
+    margin = 1.0 - sel.costs[0][1] / sel.costs[1][1]
+    keep = select(cands, QDR, previous=runner_up, hysteresis=margin + 0.01)
+    assert keep.chosen == runner_up and keep.kept_previous
+    switch = select(cands, QDR, previous=runner_up,
+                    hysteresis=max(0.0, margin - 0.01))
+    assert switch.chosen == sel.chosen and not switch.kept_previous
+
+
+def test_measured_refinement_overrides_model_and_feeds_calibrator():
+    # the model's guessed parameters are startup-heavy, the TRUE machine is
+    # bandwidth-bound: racing the top-k must flip the winner to whatever
+    # the true machine prefers, and the calibrator must absorb the races
+    m = block_sizes("same", 64, 1000)
+    guess = CostParams(500.0, 1e-6, "us", "unit")
+    true = SyntheticTimingBackend(alpha_s=0.01, beta_s_per_byte=10.0,
+                                  noise=0.0)
+    cands = enumerate_candidates("gatherv", m, 0, guess, view="model")
+    prior = Calibration(guess.alpha, guess.beta, 1.0, 1, "guess")
+    oc = OnlineCalibrator(prior, prior_weight=0.0)
+    sel = select(cands, guess, measure=true.measure, top_k=3, calibrator=oc)
+    assert sel.measured is not None and len(sel.measured) == 3
+    assert oc.n_observations == 3
+    raced = dict(sel.measured)
+    assert sel.chosen == min(raced, key=raced.get)
+    # the refit sees bandwidth-bound truth through the observations
+    assert oc.fitted().beta_s_per_byte == pytest.approx(10.0, rel=0.2)
+
+
+def test_dataplane_candidates_are_all_executable():
+    m = block_sizes("random", 16, 300, seed=3)
+    for op in ("gatherv", "scatterv"):
+        cands = enumerate_candidates(op, m, 2, QDR, view="dataplane")
+        assert cands and all(c.executable for c in cands)
+    for op, arg in (("allgatherv", m),
+                    ("alltoallv", np.outer(m, np.ones(16, int)) // 16)):
+        cands = enumerate_candidates(op, arg, None, QDR)
+        assert cands and all(c.executable for c in cands)
+        # bucketing never changes exact bytes, only padding/startups
+        assert len({c.bytes_exact for c in cands}) == 1
+
+
+# --------------------------------------------------------------- plan cache
+
+def _key(i: int, sig=(128, 256)) -> PlanKey:
+    return PlanKey("gatherv", 2, sig, i, "float32r4", "cost-model")
+
+
+def test_cache_roundtrips_plans_byte_identically(tmp_path):
+    """ISSUE property (c): a plan persisted to disk comes back
+    byte-identical (fixed pickle protocol) in a fresh process-equivalent
+    (new PlanCache over the same directory)."""
+    from repro.core.jax_collectives import plan_gatherv
+
+    plan = plan_gatherv(block_sizes("random", 16, 300, seed=5), 3,
+                        bucket_rounds=2)
+    path = str(tmp_path / "plans")
+    c1 = PlanCache(path, max_entries=8)
+    c1.put(_key(0), plan)
+    c2 = PlanCache(path, max_entries=8)       # fresh index, lazy entries
+    got = c2.get(_key(0))
+    assert got is not plan
+    assert pickle.dumps(got, protocol=4) == pickle.dumps(plan, protocol=4)
+    assert c2.hits == 1 and c2.misses == 0
+
+
+def test_cache_evicts_lru_first(tmp_path):
+    path = str(tmp_path / "plans")
+    c = PlanCache(path, max_entries=2)
+    c.put(_key(1), "one")
+    c.put(_key(2), "two")
+    assert c.get(_key(1)) == "one"            # promote key 1
+    c.put(_key(3), "three")                   # evicts key 2 (LRU)
+    assert c.evictions == 1
+    assert c.get(_key(2)) is None
+    assert c.get(_key(1)) == "one" and c.get(_key(3)) == "three"
+    # the eviction is durable: a reload sees exactly the survivors
+    c2 = PlanCache(path, max_entries=2)
+    assert len(c2) == 2
+    assert c2.get(_key(2)) is None and c2.get(_key(1)) == "one"
+
+
+def test_cache_version_mismatch_discards_store(tmp_path):
+    path = str(tmp_path / "plans")
+    c = PlanCache(path, max_entries=4)
+    c.put(_key(1), "one")
+    with open(os.path.join(path, "index.json"), "w") as f:
+        json.dump({"version": -1, "order": [_key(1).token()]}, f)
+    c2 = PlanCache(path, max_entries=4)
+    assert len(c2) == 0 and c2.get(_key(1)) is None
+    assert not [n for n in os.listdir(path) if n.endswith(".pkl")]
+
+
+def test_quantization_and_keys():
+    assert quantize_sizes([0, 1, 128, 129], 128) == (0, 128, 128, 256)
+    with pytest.raises(ValueError):
+        quantize_sizes([1], 0)
+    k1, k2 = _key(1), _key(1, sig=(128, 384))
+    assert k1.token() != k2.token()
+    assert k1.token() == _key(1).token()      # deterministic
