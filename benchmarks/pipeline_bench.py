@@ -1,0 +1,200 @@
+"""Monolithic-vs-pipelined crossover for the segmented slab dataplane.
+
+For a grid of message scales, lower the same TUW schedule monolithically
+(S=1) and pipelined (S in {2, 4, 8}) and compare
+
+* **predicted** time — the tuner's own stage-synchronous plan cost
+  (``plan_pipeline_cost``, which reduces to ``plan_step_cost`` at S=1)
+  under the ASSUMED machine parameters (``CostParams.tpu_ici``), and
+* **measured** time — the same candidates executed on a deterministic
+  synthetic machine with DIFFERENT true parameters plus seeded noise
+  (``SyntheticTimingBackend.measure``, the repo's device-free measurement
+  methodology — see ``benchmarks/tuner_bench.py --synthetic``).
+
+The interesting output is the CROSSOVER: the smallest per-block size at
+which some S > 1 beats the monolithic plan.  Theory says it exists for
+allgatherv (the broadcast phase repeats the full buffer every round, so
+pipelining collapses d·β·M toward β·M) and the bench asserts that the
+predicted and measured crossovers land on the same or adjacent grid
+points — i.e. the cost model is sharp enough for the tuner to pick S.
+For gatherv the payload-doubling rounds already sum to ~β·M, so
+pipelining rarely wins; the bench reports that honestly instead of
+asserting a win.
+
+A final section runs a large-message signature through ``PlannerService``
+and asserts the service selects a pipelined plan (S > 1) for it.
+
+Writes ``results/pipeline_bench.json`` (schema: EXPERIMENTS.md §Pipeline
+bench):
+
+    PYTHONPATH=src python benchmarks/pipeline_bench.py
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+if __package__ in (None, ""):  # direct-script execution
+    _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for _p in (_REPO, os.path.join(_REPO, "src")):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
+    from benchmarks.common import emit
+else:
+    from .common import emit
+
+from repro.core.costmodel import CostParams
+from repro.tuner import (PlannerService, SyntheticTimingBackend,
+                         enumerate_candidates)
+
+RESULTS = os.path.join(os.environ.get("REPRO_RESULTS", os.getcwd()),
+                       "results")
+
+P = 16                       # ranks
+ROW_BYTES = 4                # float32, F=1: sizes are in rows
+SEGMENTS = (1, 2, 4, 8)
+SCALES = (16, 256, 4_096, 65_536, 1_048_576)   # rows per block
+
+
+def _params_json(p: CostParams) -> dict:
+    return {"alpha": p.alpha, "beta": p.beta,
+            "time_unit": p.time_unit, "data_unit": p.data_unit}
+
+
+def _candidates(op: str, rows_per_block: int, params: CostParams):
+    """The S-family for one problem: monolithic b=1 plus pipelined
+    variants, named by S."""
+    m = [rows_per_block] * P
+    arg = m if op != "alltoallv" else [[rows_per_block] * P] * P
+    root = 0 if op in ("gatherv", "scatterv") else None
+    cands = enumerate_candidates(op, arg, root, params, view="dataplane",
+                                 buckets=(1,), segments=SEGMENTS)
+    fam = {}
+    for c in cands:
+        if c.name in ("tuw(b=1)", "tuw_composed(b=1)"):
+            fam[1] = c
+        elif c.segments > 1:
+            fam[c.segments] = c
+    assert set(fam) == set(SEGMENTS), sorted(fam)
+    return fam
+
+
+def _crossover(rows_by_scale: dict[int, dict[int, float]]) -> int | None:
+    """Smallest scale where some pipelined S beats S=1."""
+    for scale in sorted(rows_by_scale):
+        t = rows_by_scale[scale]
+        if min(t[s] for s in t if s != 1) < t[1]:
+            return scale
+    return None
+
+
+def sweep_op(op: str, assumed: CostParams, machine: SyntheticTimingBackend,
+             rows: list) -> dict:
+    sel_params = CostParams(assumed.alpha, assumed.beta * ROW_BYTES,
+                            assumed.time_unit, "row")
+    predicted: dict[int, dict[int, float]] = {}
+    measured: dict[int, dict[int, float]] = {}
+    scales = []
+    for scale in SCALES:
+        fam = _candidates(op, scale, sel_params)
+        predicted[scale] = {s: c.cost(sel_params) for s, c in fam.items()}
+        measured[scale] = {s: machine.measure(c, row_bytes=ROW_BYTES)
+                           for s, c in fam.items()}
+        best_pred = min(predicted[scale], key=lambda s: predicted[scale][s])
+        best_meas = min(measured[scale], key=lambda s: measured[scale][s])
+        scales.append({
+            "rows_per_block": scale,
+            "total_bytes": scale * P * ROW_BYTES,
+            "predicted_s": {str(s): predicted[scale][s] for s in SEGMENTS},
+            "measured_s": {str(s): measured[scale][s] for s in SEGMENTS},
+            "best_S_predicted": best_pred,
+            "best_S_measured": best_meas,
+        })
+        rows.append((
+            f"pipeline/{op}/rows={scale}",
+            measured[scale][best_meas] * 1e6,
+            f"best_S_meas={best_meas};best_S_pred={best_pred};"
+            f"mono_over_best="
+            f"{measured[scale][1] / measured[scale][best_meas]:.2f}x"))
+    xp, xm = _crossover(predicted), _crossover(measured)
+    win = None
+    if xm is not None:
+        t = measured[xm]
+        win = t[1] / min(t[s] for s in t if s != 1)
+    return {"op": op, "p": P, "row_bytes": ROW_BYTES,
+            "segments": list(SEGMENTS), "scales": scales,
+            "crossover_rows_predicted": xp, "crossover_rows_measured": xm,
+            "pipelined_win_at_measured_crossover": win}
+
+
+def tuner_section(rows: list) -> dict:
+    """PlannerService must pick S > 1 for the large-message signature and
+    S = 1 for the tiny one — the pipeline knob is a *selection*, not a
+    flag the caller has to know about."""
+    svc = PlannerService(quantum=128)
+    tiny = svc.plan_record("allgatherv", [64] * P, row_bytes=ROW_BYTES)
+    big = svc.plan_record("allgatherv", [SCALES[-1]] * P,
+                          row_bytes=ROW_BYTES)
+    assert tiny.plan.segments == 1, tiny.algo
+    assert big.plan.segments > 1, big.algo
+    rows.append(("pipeline/tuner_selected_big", float(big.plan.segments),
+                 f"algo={big.algo};tiny_algo={tiny.algo}"))
+    return {"signature_rows_per_block": SCALES[-1],
+            "selected": big.algo, "segments": big.plan.segments,
+            "tiny_selected": tiny.algo, "tiny_segments": tiny.plan.segments}
+
+
+def run(emit_rows: bool = True, out_path: str | None = None):
+    assumed = CostParams.tpu_ici()
+    # a deliberately mis-guessed true machine: slower startup, less BW
+    machine = SyntheticTimingBackend(alpha_s=2e-6, beta_s_per_byte=2.5e-11,
+                                     noise=0.03, seed=7)
+    rows: list = []
+    ops = [sweep_op(op, assumed, machine, rows)
+           for op in ("allgatherv", "gatherv")]
+    ag = ops[0]
+    assert ag["crossover_rows_measured"] is not None, (
+        "pipelining must win somewhere on the allgatherv grid")
+    assert ag["crossover_rows_predicted"] is not None
+    grid = sorted(SCALES)
+    ip = grid.index(ag["crossover_rows_predicted"])
+    im = grid.index(ag["crossover_rows_measured"])
+    assert abs(ip - im) <= 1, (
+        f"predicted crossover {ag['crossover_rows_predicted']} vs measured "
+        f"{ag['crossover_rows_measured']}: more than one grid point apart")
+    tuner = tuner_section(rows)
+    payload = {
+        "version": 1,
+        "assumed_params": _params_json(assumed),
+        "true_machine": {"alpha_s": machine.alpha_s,
+                         "beta_s_per_byte": machine.beta_s_per_byte,
+                         "noise": machine.noise,
+                         "backend": machine.fingerprint()},
+        "ops": ops,
+        "tuner": tuner,
+    }
+    if out_path is None:
+        out_path = os.path.join(RESULTS, "pipeline_bench.json")
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    if emit_rows:
+        emit(rows)
+        print(f"# wrote {out_path}", file=sys.stderr)
+    return rows, payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default=None,
+                    help="JSON output path "
+                         "(default results/pipeline_bench.json)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

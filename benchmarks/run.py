@@ -8,7 +8,8 @@ import time
 
 def main() -> None:
     from . import extensions_bench, guidelines_bench, jax_runtime, \
-        moe_dispatch, paper_tables, roofline, tuner_bench, variants
+        moe_dispatch, paper_tables, pipeline_bench, roofline, tuner_bench, \
+        variants
     t0 = time.time()
     print("name,us_per_call,derived")
     paper_tables.run()
@@ -17,6 +18,7 @@ def main() -> None:
     extensions_bench.run()
     moe_dispatch.run()
     tuner_bench.run(synthetic=True)
+    pipeline_bench.run()
     jax_runtime.run()
     roofline.run()
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)

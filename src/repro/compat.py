@@ -14,6 +14,26 @@ except AttributeError:  # pragma: no cover - depends on installed jax
     from jax.experimental.shard_map import shard_map  # noqa: F401
 
 
+def shard_map_unchecked(f, mesh, in_specs, out_specs):
+    """``shard_map`` with the replication checker off (portably).
+
+    ``pallas_call`` has no replication rule, so shard_map bodies that run
+    Pallas kernels (the slab data plane) must disable the check.  The
+    keyword moved across jax versions (``check_rep`` in 0.4.x/0.5,
+    ``check_vma`` later); fall back to a plain call when neither exists.
+    """
+    import inspect
+
+    params = inspect.signature(shard_map).parameters
+    kw = {}
+    if "check_rep" in params:
+        kw["check_rep"] = False
+    elif "check_vma" in params:
+        kw["check_vma"] = False
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     **kw)
+
+
 def pallas_tpu_compiler_params(**kwargs):
     """Build pltpu CompilerParams under either jax naming."""
     from jax.experimental.pallas import tpu as pltpu

@@ -15,10 +15,14 @@ from .distributed import (  # noqa: F401
 )
 from .costmodel import (  # noqa: F401
     CostParams, allgatherv_time, allreduce_time, alltoallv_time,
-    simulate_composed, simulate_gather, simulate_scatter,
+    simulate_composed, simulate_gather, simulate_pipelined,
+    simulate_scatter,
 )
 from .composed import (  # noqa: F401
     ComposedSchedule, Transfer, allgatherv_schedule, alltoallv_schedule,
     independent_scatter_bytes,
+)
+from .pipeline import (  # noqa: F401
+    execute_steps_numpy, pipeline_rounds, segment_bounds,
 )
 from . import baselines, distributions, guidelines  # noqa: F401

@@ -221,6 +221,38 @@ def simulate_composed(schedule, params: CostParams) -> float:
                for rnd in schedule.rounds if rnd)
 
 
+def simulate_pipelined(rounds, total_rows: int, params: CostParams,
+                       segments: int) -> float:
+    """Stage-synchronous completion time of a pipelined schedule.
+
+    ``rounds`` is the round-synchronous schedule as a list of rounds of
+    ``(src, dst, size, start)`` transfers over the flat row space
+    ``[0, total_rows)`` — the same representation the lowering consumes.
+    Splitting into ``S = segments`` global chunks re-times the schedule
+    into ``len(rounds) + S - 1`` stages (``repro.core.pipeline``); under
+    the model's stage-synchronous execution every stage costs one startup
+    plus the bandwidth of its LARGEST piece (pieces within a stage have
+    disjoint rows and endpoints-after-legalization, so they overlap):
+
+        T(S) = sum_stages (alpha + beta * max_piece)
+             ~ (R + S - 1) * (alpha + beta * m_hat / S)
+
+    with ``m_hat`` the critical transfer.  As ``S`` grows the bandwidth
+    term collapses from ``R * beta * m_hat`` toward ``beta * m_hat`` —
+    the linear-term behavior of Theorem 1 on real streamed hardware — at
+    the price of ``S - 1`` extra startups.  The dataplane view of the
+    same trade-off (actual lowered steps, congestion-aware) is
+    ``repro.tuner.candidates.plan_pipeline_cost``; this function is the
+    machine-model view used by the crossover analysis.
+    """
+    from .pipeline import pipeline_rounds
+
+    params.validate()
+    a, b = params.alpha, params.beta
+    stages = pipeline_rounds([list(r) for r in rounds], segments, total_rows)
+    return sum(a + b * max(t[2] for t in st) for st in stages if st)
+
+
 def allgatherv_time(m, params: CostParams, root: int | None = None) -> float:
     """Predicted composed-allgatherv time (gather + full-buffer broadcast)."""
     from .composed import allgatherv_schedule

@@ -28,7 +28,7 @@ TPU adaptation of the paper's point-to-point schedules (DESIGN.md §2):
 
 * **composed mode** — irregular collectives built by composing rooted
   trees (``repro.core.composed``).  ``allgatherv`` is the gather schedule
-  followed by a full-buffer broadcast down the reversed tree;
+  followed by a broadcast of the packed buffer down the reversed tree;
   ``alltoallv`` is p rooted scatter trees packed round-robin into global
   rounds that are partial permutations.  Both lower exactly like the
   static-irregular mode: one ``lax.ppermute`` per global round (or per
@@ -36,6 +36,17 @@ TPU adaptation of the paper's point-to-point schedules (DESIGN.md §2):
   device-dependent ``dynamic_slice`` starts into a flat row space that
   concatenates the per-tree coordinate spaces.  ``ComposedPlan`` carries
   the tables and is validated at build time.
+
+* **pipelined mode** (``segments > 1`` on any plan_*) — the same
+  schedule re-timed by ``repro.core.pipeline``: the flat row space is
+  cut into S global chunks and the chunk-j piece of a round-k transfer
+  runs at stage k + j, so each ppermute carries a ``~1/S``-sized
+  contiguous slab and rounds overlap across chunks in ``R + S - 1``
+  stages (the allgatherv broadcast streams chunks instead of repeating
+  the full buffer).  Every step still moves only its live slab —
+  extracted/merged at dynamic offsets by the pluggable slab backend
+  (Pallas kernels on TPU via ``use_pallas_dataplane``, jnp reference
+  elsewhere) — and results are byte-identical to the monolithic path.
 
 The ordering invariant of the paper carries over: every payload is a
 consecutive rank range written at its global offset, so the root's buffer
@@ -56,9 +67,38 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map  # noqa: F401  (re-exported for callers)
+from repro.compat import shard_map_unchecked
 
 from .composed import ComposedSchedule, allgatherv_schedule, alltoallv_schedule
+from .pipeline import num_stages as _pipeline_num_stages
+from .pipeline import pipeline_rounds
 from .treegather import GatherTree, build_gather_tree, ceil_log2
+
+# --------------------------------------------------------------------------
+# slab backend: jnp reference vs Pallas kernels (repro.kernels.ragged_gather)
+# --------------------------------------------------------------------------
+
+# None = auto (Pallas only on TPU, where the kernels compile); True/False
+# force.  The two backends are differentially tested row-identical.
+_PALLAS_SLABS: bool | None = None
+
+
+def use_pallas_dataplane(enable: bool | None) -> None:
+    """Select the slab copy backend for the SPMD executors.
+
+    ``True`` routes every per-step slab extract/merge through the Pallas
+    kernels in ``repro.kernels.ragged_gather`` (compiled on TPU); ``False``
+    uses the jnp ``dynamic_slice`` reference; ``None`` (default) picks
+    Pallas exactly when running on TPU.
+    """
+    global _PALLAS_SLABS
+    _PALLAS_SLABS = enable
+
+
+def _pallas_slabs_enabled() -> bool:
+    if _PALLAS_SLABS is not None:
+        return _PALLAS_SLABS
+    return jax.default_backend() == "tpu"
 
 
 # --------------------------------------------------------------------------
@@ -85,9 +125,24 @@ class GathervPlan:
     steps: tuple[tuple, ...]
     tree_bytes_exact: int          # sum of true transfer sizes (paper cost)
     tree_bytes_padded: int         # what the padded ppermutes actually move
+    segments: int = 1              # pipeline segment count S (1 = monolithic)
+    stage_ids: tuple[int, ...] = ()  # pipeline stage of each step (len(steps))
+    num_stages: int = 0            # R + S - 1 stages (R for S = 1)
 
     @property
     def padding_overhead(self) -> float:
+        """Relative padding cost of the slab data plane, as a fraction.
+
+        Every ppermute step carries one contiguous slab per pair, padded
+        to the LARGEST slab in its step group (XLA static shapes) — never
+        the whole capacity buffer.  ``tree_bytes_padded`` sums those
+        per-step payloads over all pairs; ``tree_bytes_exact`` sums the
+        true slab sizes (the paper's linear cost).  The ratio minus one is
+        therefore the within-step padding waste only: 0.0 means every
+        slab in every step group was the same size.  ``bucket_rounds`` and
+        pipeline ``segments`` both shrink it by making step groups more
+        homogeneous.
+        """
         if self.tree_bytes_exact == 0:
             return 0.0
         return self.tree_bytes_padded / self.tree_bytes_exact - 1.0
@@ -121,18 +176,21 @@ def _legalize_round(transfers):
 def _bucketed_steps(rounds, p: int, bucket_rounds: int):
     """Lower transfer rounds to ppermute step tables.
 
-    ``rounds``: list of rounds, each a list of ``(src, dst, size, start)``.
-    Rounds with endpoint conflicts are first split into permutation-legal
-    waves (see ``_legalize_round``); each wave then becomes up to
-    ``bucket_rounds`` ppermute steps (pairs split into size buckets:
-    extra latency, less padding).  Returns
-    ``(steps, exact, padded, max_payload)``.
+    ``rounds``: list of rounds (or pipeline stages), each a list of
+    ``(src, dst, size, start)``.  Rounds with endpoint conflicts are first
+    split into permutation-legal waves (see ``_legalize_round``); each
+    wave then becomes up to ``bucket_rounds`` ppermute steps (pairs split
+    into size buckets: extra latency, less padding).  Returns
+    ``(steps, exact, padded, max_payload, stage_ids)`` where
+    ``stage_ids[k]`` is the index of the round/stage step ``k`` lowered
+    from — the pipeline cost model groups steps by it.
     """
     steps = []
+    stage_ids = []
     exact = 0
     padded = 0
     max_payload = 1
-    for rnd in rounds:
+    for stage, rnd in enumerate(rounds):
         transfers = sorted(rnd, key=lambda t: t[2])
         if not transfers:
             continue
@@ -156,16 +214,22 @@ def _bucketed_steps(rounds, p: int, bucket_rounds: int):
                     padded += payload
                 steps.append((tuple(perm), int(payload), send_start,
                               recv_start, recv_valid))
+                stage_ids.append(stage)
                 max_payload = max(max_payload, payload)
-    return tuple(steps), exact, padded, max_payload
+    return tuple(steps), exact, padded, max_payload, tuple(stage_ids)
 
 
 def plan_gatherv(sizes, root: int, tree: GatherTree | None = None,
-                 bucket_rounds: int = 1) -> GathervPlan:
+                 bucket_rounds: int = 1, segments: int = 1) -> GathervPlan:
     """Build the SPMD schedule for a gatherv over ``p = len(sizes)`` devices.
 
     ``bucket_rounds > 1`` splits each merge round's pairs into up to that
     many size buckets, each its own ppermute: extra latency, less padding.
+    ``segments > 1`` pipelines the schedule (``repro.core.pipeline``): the
+    flat row space is cut into that many global chunks and the chunk-``j``
+    piece of a round-``k`` transfer runs at stage ``k + j``, so each
+    ppermute carries ``~1/segments`` of the payload and rounds overlap
+    across segments in ``rounds + segments - 1`` stages.
     """
     sizes = tuple(int(s) for s in sizes)
     p = len(sizes)
@@ -191,33 +255,48 @@ def plan_gatherv(sizes, root: int, tree: GatherTree | None = None,
         [(e.child, e.parent, e.size, offsets[e.lo]) for e in by_round[rnd]]
         for rnd in sorted(by_round)
     ]
-    steps, exact, padded, max_payload = _bucketed_steps(rounds, p,
-                                                        bucket_rounds)
+    n_rounds = len(rounds)
+    rounds = pipeline_rounds(rounds, segments, total)
+    steps, exact, padded, max_payload, stage_ids = _bucketed_steps(
+        rounds, p, bucket_rounds)
     buf_rows = total + max(cap, max_payload)
     return GathervPlan(p, root, sizes, offsets, total, cap, buf_rows,
-                       steps, exact, padded)
+                       steps, exact, padded, segments=int(segments),
+                       stage_ids=stage_ids,
+                       num_stages=_pipeline_num_stages(n_rounds, segments))
 
 
 # --------------------------------------------------------------------------
 # SPMD executors (call inside shard_map)
 # --------------------------------------------------------------------------
 
+def _slab_ops():
+    """(extract, merge) pair: Pallas kernels on TPU, the jnp oracles from
+    ``repro.kernels.ragged_gather.ref`` elsewhere — one definition of the
+    slab semantics per backend (see ``use_pallas_dataplane``)."""
+    if _pallas_slabs_enabled():
+        from repro.kernels.ragged_gather.ops import slab_extract, slab_merge
+        return slab_extract, slab_merge
+    from repro.kernels.ragged_gather.ref import (slab_extract_ref,
+                                                 slab_merge_ref)
+    return slab_extract_ref, slab_merge_ref
+
+
 def _apply_steps(buf: jax.Array, steps, r, axis_name: str) -> jax.Array:
     """Run ppermute step tables over a flat row buffer (shared by the
-    gatherv and composed executors).  Each step: slice ``payload`` rows at
-    the device's send offset, permute, mask-merge the valid prefix at the
-    device's receive offset (same flat offset: zero-copy invariant)."""
-    F = buf.shape[1]
+    gatherv and composed executors).  Each step: extract the ``payload``-row
+    slab at the device's send offset, permute ONLY that slab (never the
+    whole capacity buffer), merge the valid prefix at the device's receive
+    offset (same flat offset: zero-copy invariant).  Slab extract/merge go
+    through the pluggable backend (Pallas kernels on TPU)."""
+    extract, merge = _slab_ops()
     for perm, payload, send_start, recv_start, recv_valid in steps:
         s0 = jnp.asarray(send_start)[r]
-        out = jax.lax.dynamic_slice(buf, (s0, jnp.int32(0)), (payload, F))
+        out = extract(buf, s0, payload)
         got = jax.lax.ppermute(out, axis_name, perm)
         r0 = jnp.asarray(recv_start)[r]
         nv = jnp.asarray(recv_valid)[r]
-        cur = jax.lax.dynamic_slice(buf, (r0, jnp.int32(0)), (payload, F))
-        mask = (jnp.arange(payload, dtype=jnp.int32) < nv)[:, None]
-        upd = jnp.where(mask, got, cur)
-        buf = jax.lax.dynamic_update_slice(buf, upd, (r0, jnp.int32(0)))
+        buf = merge(buf, got, r0, nv)
     return buf
 
 
@@ -245,6 +324,7 @@ def scatterv_shard(buf_root: jax.Array, plan: GathervPlan, axis_name: str) -> ja
     r = jax.lax.axis_index(axis_name)
     F = buf_root.shape[1]
     offs = jnp.asarray(plan.offsets, jnp.int32)
+    extract, merge = _slab_ops()
     buf = buf_root
     for perm, payload, send_start, recv_start, recv_valid in reversed(plan.steps):
         # reversed edge parent -> child, same global row range: in the gather
@@ -260,14 +340,11 @@ def scatterv_shard(buf_root: jax.Array, plan: GathervPlan, axis_name: str) -> ja
             c_recv[src] = send_start[src]
             c_valid[src] = recv_valid[dst]
         s0 = jnp.asarray(p_send)[r]
-        out = jax.lax.dynamic_slice(buf, (s0, jnp.int32(0)), (payload, F))
+        out = extract(buf, s0, payload)
         got = jax.lax.ppermute(out, axis_name, rperm)
         r0 = jnp.asarray(c_recv)[r]
         nv = jnp.asarray(c_valid)[r]
-        cur = jax.lax.dynamic_slice(buf, (r0, jnp.int32(0)), (payload, F))
-        mask = (jnp.arange(payload, dtype=jnp.int32) < nv)[:, None]
-        upd = jnp.where(mask, got, cur)
-        buf = jax.lax.dynamic_update_slice(buf, upd, (r0, jnp.int32(0)))
+        buf = merge(buf, got, r0, nv)
     own = jax.lax.dynamic_slice(buf, (offs[r], jnp.int32(0)),
                                 (plan.cap, F))
     return own
@@ -278,12 +355,13 @@ def scatterv_shard(buf_root: jax.Array, plan: GathervPlan, axis_name: str) -> ja
 # --------------------------------------------------------------------------
 
 def run_gatherv(mesh: Mesh, axis_name: str, blocks: list[np.ndarray],
-                root: int, bucket_rounds: int = 1):
+                root: int, bucket_rounds: int = 1, segments: int = 1):
     """Host-facing helper: gather ragged ``blocks`` (list of (n_i, F)) to the
     root over ``mesh[axis_name]``.  Returns (result (total, F), plan)."""
     sizes = [int(b.shape[0]) for b in blocks]
     F = blocks[0].shape[1]
-    plan = plan_gatherv(sizes, root, bucket_rounds=bucket_rounds)
+    plan = plan_gatherv(sizes, root, bucket_rounds=bucket_rounds,
+                        segments=segments)
     x = np.zeros((plan.p, plan.cap, F), blocks[0].dtype)
     for i, b in enumerate(blocks):
         x[i, : sizes[i]] = b
@@ -291,7 +369,7 @@ def run_gatherv(mesh: Mesh, axis_name: str, blocks: list[np.ndarray],
 
     @jax.jit
     def run(xg):
-        return shard_map(
+        return shard_map_unchecked(
             lambda xl: gatherv_shard(xl, plan, axis_name),
             mesh=mesh, in_specs=P(axis_name), out_specs=P(axis_name),
         )(xg)
@@ -303,10 +381,10 @@ def run_gatherv(mesh: Mesh, axis_name: str, blocks: list[np.ndarray],
 
 
 def run_scatterv(mesh: Mesh, axis_name: str, data: np.ndarray,
-                 sizes: list[int], root: int):
+                 sizes: list[int], root: int, segments: int = 1):
     """Scatter rank-ordered rows of ``data`` (total, F) from the root into
     ragged per-device blocks.  Returns (list of (n_i, F), plan)."""
-    plan = plan_gatherv(sizes, root)
+    plan = plan_gatherv(sizes, root, segments=segments)
     F = data.shape[1]
     xin = np.zeros((plan.p, plan.buf_rows, F), data.dtype)
     xin[root, : plan.total] = data
@@ -314,7 +392,7 @@ def run_scatterv(mesh: Mesh, axis_name: str, data: np.ndarray,
 
     @jax.jit
     def run(xg):
-        return shard_map(
+        return shard_map_unchecked(
             lambda xl: scatterv_shard(xl, plan, axis_name),
             mesh=mesh, in_specs=P(axis_name), out_specs=P(axis_name),
         )(xg)
@@ -355,9 +433,23 @@ class ComposedPlan:
     num_rounds: int                 # composed global rounds (pre-bucketing)
     tree_bytes_exact: int
     tree_bytes_padded: int
+    segments: int = 1               # pipeline segment count S (1 = monolithic)
+    stage_ids: tuple[int, ...] = ()   # pipeline stage of each step
+    num_stages: int = 0             # rounds + S - 1 stages
 
     @property
     def padding_overhead(self) -> float:
+        """Relative padding cost of the slab data plane, as a fraction.
+
+        Same contract as :meth:`GathervPlan.padding_overhead`: each
+        ppermute step moves one contiguous slab per pair, padded to the
+        largest slab in its step group — not the whole capacity buffer —
+        so this ratio measures within-step size spread only.  For
+        allgatherv the broadcast-phase slabs are all ``total`` rows (or
+        ``total/S`` pipelined), so its overhead comes from the gather
+        phase; for alltoallv it reflects how unevenly the packed scatter
+        trees' slabs bucket together.
+        """
         if self.tree_bytes_exact == 0:
             return 0.0
         return self.tree_bytes_padded / self.tree_bytes_exact - 1.0
@@ -387,13 +479,16 @@ class ComposedPlan:
 
 
 def plan_allgatherv(sizes, root: int | None = None,
-                    bucket_rounds: int = 1,
+                    bucket_rounds: int = 1, segments: int = 1,
                     schedule: ComposedSchedule | None = None) -> ComposedPlan:
     """Lower an allgatherv schedule (gather + broadcast) to ppermute steps.
 
     Every device ends with all blocks in rank order in rows [0:total] of
     its buffer.  ``root=None`` lets the algorithm choose the gather root
-    (Lemma 1, no waiting penalty).
+    (Lemma 1, no waiting penalty).  ``segments > 1`` pipelines the whole
+    composed schedule — gather and broadcast phases stream the same global
+    row chunks, so broadcast stage ``j`` starts as soon as chunk ``j`` is
+    complete at the root instead of waiting for the full gather.
     """
     if schedule is None:
         schedule = allgatherv_schedule(sizes, root=root)
@@ -410,19 +505,22 @@ def plan_allgatherv(sizes, root: int | None = None,
     offsets = tuple(int(x) for x in schedule.offsets(0))
     rounds = [[(t.src, t.dst, t.size, t.start) for t in rnd]
               for rnd in schedule.rounds]
-    steps, exact, padded, max_payload = _bucketed_steps(rounds, p,
-                                                        bucket_rounds)
+    rounds = pipeline_rounds(rounds, segments, total)
+    steps, exact, padded, max_payload, stage_ids = _bucketed_steps(
+        rounds, p, bucket_rounds)
     buf_rows = total + max(cap, max_payload)
     plan = ComposedPlan(
         "allgatherv", p, schedule.root, total, cap, buf_rows,
         in_starts=offsets, out_valid=(total,) * p, out_rows=buf_rows,
         steps=steps, extract=(), chunk=1, num_rounds=schedule.num_rounds,
-        tree_bytes_exact=exact, tree_bytes_padded=padded)
+        tree_bytes_exact=exact, tree_bytes_padded=padded,
+        segments=int(segments), stage_ids=stage_ids,
+        num_stages=_pipeline_num_stages(schedule.num_rounds, segments))
     plan.validate()
     return plan
 
 
-def plan_alltoallv(size_matrix, bucket_rounds: int = 1,
+def plan_alltoallv(size_matrix, bucket_rounds: int = 1, segments: int = 1,
                    schedule: ComposedSchedule | None = None) -> ComposedPlan:
     """Lower an alltoallv schedule (p packed scatter trees) to ppermute
     steps plus per-tree extraction tables.
@@ -430,6 +528,8 @@ def plan_alltoallv(size_matrix, bucket_rounds: int = 1,
     Device ``i`` supplies its packed row (blocks destined to ranks
     0..p-1, concatenated); it receives blocks from all sources, each at
     its consecutive-rank-range output offset ``sum_{i'<i} S[i'][j]``.
+    ``segments > 1`` pipelines the packed global rounds over global
+    chunks of the flat (concatenated per-tree) row space.
     """
     if schedule is None:
         schedule = alltoallv_schedule(size_matrix)
@@ -446,8 +546,9 @@ def plan_alltoallv(size_matrix, bucket_rounds: int = 1,
     chunk = max(1, int(S.max(initial=0)))
     rounds = [[(t.src, t.dst, t.size, t.start) for t in rnd]
               for rnd in schedule.rounds]
-    steps, exact, padded, max_payload = _bucketed_steps(rounds, p,
-                                                        bucket_rounds)
+    rounds = pipeline_rounds(rounds, segments, total)
+    steps, exact, padded, max_payload, stage_ids = _bucketed_steps(
+        rounds, p, bucket_rounds)
     buf_rows = total + max(cap, max_payload, chunk)
     out_valid = tuple(int(c) for c in col_totals)
     out_rows = max(1, int(col_totals.max(initial=0))) + chunk
@@ -469,7 +570,9 @@ def plan_alltoallv(size_matrix, bucket_rounds: int = 1,
         in_starts=tuple(int(x) for x in schedule.row_starts),
         out_valid=out_valid, out_rows=out_rows, steps=steps,
         extract=tuple(extract), chunk=chunk, num_rounds=schedule.num_rounds,
-        tree_bytes_exact=exact, tree_bytes_padded=padded)
+        tree_bytes_exact=exact, tree_bytes_padded=padded,
+        segments=int(segments), stage_ids=stage_ids,
+        num_stages=_pipeline_num_stages(schedule.num_rounds, segments))
     plan.validate()
     return plan
 
@@ -513,7 +616,8 @@ def alltoallv_shard(x_local: jax.Array, plan: ComposedPlan,
 
 
 def run_allgatherv(mesh: Mesh, axis_name: str, blocks: list[np.ndarray],
-                   root: int | None = None, bucket_rounds: int = 1):
+                   root: int | None = None, bucket_rounds: int = 1,
+                   segments: int = 1):
     """Host-facing helper: allgatherv ragged ``blocks`` over the mesh.
     Returns ((p, total, F) array — every device's rank-ordered copy —
     and the plan)."""
@@ -522,7 +626,8 @@ def run_allgatherv(mesh: Mesh, axis_name: str, blocks: list[np.ndarray],
     if len(blocks) != mesh.devices.size:
         raise ValueError(f"{len(blocks)} blocks for a "
                          f"{mesh.devices.size}-device mesh")
-    plan = plan_allgatherv(sizes, root=root, bucket_rounds=bucket_rounds)
+    plan = plan_allgatherv(sizes, root=root, bucket_rounds=bucket_rounds,
+                           segments=segments)
     x = np.zeros((plan.p, plan.cap, F), blocks[0].dtype)
     for i, b in enumerate(blocks):
         x[i, : sizes[i]] = b
@@ -530,7 +635,7 @@ def run_allgatherv(mesh: Mesh, axis_name: str, blocks: list[np.ndarray],
 
     @jax.jit
     def run(xg):
-        return shard_map(
+        return shard_map_unchecked(
             lambda xl: allgatherv_shard(xl, plan, axis_name),
             mesh=mesh, in_specs=P(axis_name), out_specs=P(axis_name),
         )(xg)
@@ -541,7 +646,8 @@ def run_allgatherv(mesh: Mesh, axis_name: str, blocks: list[np.ndarray],
 
 
 def run_alltoallv(mesh: Mesh, axis_name: str,
-                  blocks: list[list[np.ndarray]], bucket_rounds: int = 1):
+                  blocks: list[list[np.ndarray]], bucket_rounds: int = 1,
+                  segments: int = 1):
     """Host-facing helper: ``blocks[i][j]`` is the (S[i][j], F) block rank
     ``i`` sends to rank ``j``.  Returns (list of per-device received
     buffers — device j's is ``concat_i blocks[i][j]`` — and the plan)."""
@@ -552,7 +658,8 @@ def run_alltoallv(mesh: Mesh, axis_name: str,
     S = [[int(b.shape[0]) for b in row] for row in blocks]
     F = blocks[0][0].shape[1]
     dtype = blocks[0][0].dtype
-    plan = plan_alltoallv(S, bucket_rounds=bucket_rounds)
+    plan = plan_alltoallv(S, bucket_rounds=bucket_rounds,
+                          segments=segments)
     x = np.zeros((p, plan.cap, F), dtype)
     for i, row in enumerate(blocks):
         off = 0
@@ -563,7 +670,7 @@ def run_alltoallv(mesh: Mesh, axis_name: str,
 
     @jax.jit
     def run(xg):
-        return shard_map(
+        return shard_map_unchecked(
             lambda xl: alltoallv_shard(xl, plan, axis_name),
             mesh=mesh, in_specs=P(axis_name), out_specs=P(axis_name),
         )(xg)

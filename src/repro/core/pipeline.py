@@ -1,0 +1,143 @@
+"""Segmented pipelining of round-synchronous schedules (beyond-paper layer).
+
+The monolithic data plane serializes a tree's rounds: round ``k`` moves
+its whole payload before round ``k+1`` starts, so a plan with ``R``
+rounds pays the bandwidth term ``R`` times on the critical buffer instead
+of once — the gap between the padded ppermute lowering and the paper's
+``3⌈log₂p⌉α + βΣm_i`` bound.  Chunked/pipelined execution over the same
+trees is the standard fix (Träff arXiv:1711.08731 §5, NVIDIA PAT
+arXiv:2506.20252): split the payload into ``S`` segments and stream them,
+so round ``k+1`` of segment ``j`` overlaps round ``k`` of segment
+``j+1`` and the whole schedule finishes in ``R + S - 1`` stages of
+``~m/S``-sized transfers.
+
+**Segmentation is by GLOBAL row chunk, not per transfer.**  The flat row
+space ``[0, total)`` is cut into ``S`` contiguous chunks; the piece of a
+round-``k`` transfer that falls in chunk ``j`` is scheduled at stage
+``k + j``.  This is the choice that makes the pipeline correct by
+construction:
+
+* a row in chunk ``j`` only ever travels in chunk-``j`` pieces, so a
+  stage-``k+j`` forward depends only on stages ``k' + j`` with
+  ``k' < k`` — strictly earlier stages;
+* two pieces in the same stage ``t`` come from different rounds
+  ``k ≠ k'`` and therefore different chunks ``t-k ≠ t-k'`` — disjoint
+  rows, so there is no intra-stage dependency and the stage's pieces may
+  be issued in any wave order;
+* every piece is still one contiguous slab at its global flat offset, so
+  the zero-copy consecutive-rank-range invariant (and the whole
+  ``dynamic_slice`` addressing scheme) survives untouched.
+
+Per-transfer relative segmentation — splitting each transfer's own range
+into ``S`` equal parts — does NOT have these properties: a child's range
+can sit entirely inside the parent's last segment, so "segment j forwards
+segment j" breaks and same-stage ppermutes can carry stale rows.
+
+``pipeline_rounds`` is the whole transform; the lowering in
+``repro.core.jax_collectives`` runs it right before ``_bucketed_steps``,
+so legalization, bucketing, and both SPMD executors are reused verbatim.
+``execute_steps_numpy`` is the pure-NumPy oracle of the step tables used
+by the differential tests (pipelined == monolithic at any ``p`` without
+devices).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+Transfer4 = tuple[int, int, int, int]  # (src, dst, size, start)
+
+
+def segment_bounds(total_rows: int, segments: int) -> list[tuple[int, int]]:
+    """Cut ``[0, total_rows)`` into ``segments`` contiguous chunks.
+
+    Chunk sizes differ by at most one row (the first ``total % S`` chunks
+    are one row larger); zero-row chunks are legal and simply contribute
+    no pieces.
+    """
+    S = int(segments)
+    if S < 1:
+        raise ValueError("segments >= 1")
+    base, rem = divmod(max(0, int(total_rows)), S)
+    bounds, lo = [], 0
+    for j in range(S):
+        hi = lo + base + (1 if j < rem else 0)
+        bounds.append((lo, hi))
+        lo = hi
+    return bounds
+
+
+def pipeline_rounds(rounds: list[list[Transfer4]], segments: int,
+                    total_rows: int) -> list[list[Transfer4]]:
+    """Re-time ``rounds`` into ``len(rounds) + segments - 1`` stages.
+
+    ``rounds[k]`` is a list of ``(src, dst, size, start)`` transfers whose
+    row ranges live in the flat space ``[0, total_rows)``.  The piece of a
+    round-``k`` transfer intersecting global chunk ``j`` is emitted at
+    stage ``k + j`` (see module docstring for why this is dependency-safe
+    and slab-contiguous).  ``segments == 1`` returns the rounds unchanged
+    (shallow copies), so the monolithic path is the ``S=1`` special case.
+
+    Stages that end up empty are kept (as empty lists) so stage indices
+    stay aligned with the cost model; the lowering skips them.
+    """
+    rounds = [list(r) for r in rounds]
+    if segments <= 1 or not rounds:
+        return rounds
+    bounds = segment_bounds(total_rows, segments)
+    stages: list[list[Transfer4]] = [
+        [] for _ in range(len(rounds) + segments - 1)]
+    for k, rnd in enumerate(rounds):
+        for src, dst, size, start in rnd:
+            a, b = int(start), int(start) + int(size)
+            for j, (lo, hi) in enumerate(bounds):
+                plo, phi = max(a, lo), min(b, hi)
+                if phi > plo:
+                    stages[k + j].append((src, dst, phi - plo, plo))
+    return stages
+
+
+def num_stages(n_rounds: int, segments: int) -> int:
+    """Stage count of the pipelined schedule: ``R + S - 1`` (0 if empty)."""
+    if n_rounds <= 0:
+        return 0
+    return n_rounds + max(1, int(segments)) - 1
+
+
+# --------------------------------------------------------------------------
+# NumPy reference executor of lowered step tables (differential oracle)
+# --------------------------------------------------------------------------
+
+def execute_steps_numpy(steps, bufs: np.ndarray) -> np.ndarray:
+    """Run ppermute step tables over per-device buffers, in NumPy.
+
+    ``bufs``: (p, buf_rows, F) array, one flat row buffer per device.
+    Each step is applied with ppermute semantics — every receive reads the
+    sender's buffer state from BEFORE the step — exactly mirroring
+    ``jax_collectives._apply_steps``.  Returns the final (p, buf_rows, F)
+    state.  This lets differential tests compare pipelined vs monolithic
+    plans at any ``p`` (64, 4096, ...) without devices.
+    """
+    bufs = np.array(bufs, copy=True)
+    for perm, payload, send_start, recv_start, recv_valid in steps:
+        snap = bufs.copy()
+        for s, d in perm:
+            s0 = int(send_start[s])
+            r0 = int(recv_start[d])
+            nv = int(recv_valid[d])
+            bufs[d, r0: r0 + nv] = snap[s, s0: s0 + nv]
+    return bufs
+
+
+def execute_scatter_steps_numpy(plan, bufs: np.ndarray) -> np.ndarray:
+    """NumPy mirror of ``jax_collectives.scatterv_shard``'s reverse walk:
+    the gather plan's steps run backwards with transposed tables (parent
+    pushes the same global row ranges back down the tree)."""
+    bufs = np.array(bufs, copy=True)
+    for perm, payload, send_start, recv_start, recv_valid in \
+            reversed(plan.steps):
+        snap = bufs.copy()
+        for src, dst in perm:
+            s0 = int(send_start[src])     # parent reads where child sent
+            nv = int(recv_valid[dst])
+            bufs[src, s0: s0 + nv] = snap[dst, s0: s0 + nv]
+    return bufs

@@ -1,11 +1,23 @@
-"""Pallas TPU kernel: tiled ragged row gather out[i] = x[idx[i]].
+"""Pallas TPU kernels for the ragged pack/unpack/slab data plane.
 
-TPU adaptation of the gatherv data plane (DESIGN.md §2): instead of the
-CPU-style per-block memcpy with overlapping destination windows, the
-kernel is OUTPUT-TILE-CENTRIC — each grid step owns one (block_rows, F)
-output tile (disjoint writes, MXU/VPU-aligned), and the row-index map
-``idx`` is scalar-prefetched into SMEM so the source row of every output
-row is known before the tile executes.  x stays resident in VMEM.
+* ``ragged_gather_kernel`` — tiled ragged row gather out[i] = x[idx[i]]
+  (pack).  OUTPUT-TILE-CENTRIC: each grid step owns one (block_rows, F)
+  output tile (disjoint writes, MXU/VPU-aligned), and the row-index map
+  ``idx`` is scalar-prefetched into SMEM so the source row of every
+  output row is known before the tile executes.  x stays resident in
+  VMEM.
+* ``ragged_scatter_kernel`` — the inverse unpack out[idx[i]] = x[i].
+  INPUT-TILE-CENTRIC: each grid step owns one (block_rows, F) tile of x
+  and stores its rows at their (prefetched) destinations; the output is
+  zero-initialized by the first grid step and revisited by later ones
+  (TPU grids are sequential, so the read-modify-write order is defined).
+  Out-of-range destinations land on a caller-provided trash row.
+* ``slab_extract_kernel`` / ``slab_merge_kernel`` — the per-ppermute
+  slab copies of the gatherv/scatterv data plane: read ``rows``
+  contiguous rows at a DYNAMIC (traced, per-device) offset, and
+  mask-merge a received slab back at its receive offset.  The offsets
+  arrive as scalar-prefetch arguments, so inside ``shard_map`` each
+  device runs the same program with its own table-looked-up starts.
 """
 from __future__ import annotations
 
@@ -50,3 +62,102 @@ def ragged_gather_kernel(x: jax.Array, idx: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((m, f), x.dtype),
         interpret=interpret,
     )(idx, x)
+
+
+def _scatter_kernel(idx_ref, x_ref, o_ref, *, block_rows: int):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    def body(r, _):
+        dst = idx_ref[t * block_rows + r]
+        dst = jnp.clip(dst, 0, o_ref.shape[0] - 1)
+        o_ref[pl.ds(dst, 1), :] = x_ref[pl.ds(r, 1), :]
+        return 0
+
+    jax.lax.fori_loop(0, block_rows, body, 0)
+
+
+def ragged_scatter_kernel(x: jax.Array, idx: jax.Array, n_out: int, *,
+                          block_rows: int = 128,
+                          interpret: bool = False) -> jax.Array:
+    """x: (M, F) rows; idx: (M,) int32 (padded to block_rows).  Returns
+    (n_out, F) zero-initialized with out[idx[i]] = x[i] (idx clipped into
+    range; callers point padding rows at a trash row ``n_out - 1`` or pass
+    an ``n_out`` one larger than the live range).  Duplicate destinations
+    resolve to the LAST writer in row order (the grid is sequential)."""
+    m = idx.shape[0]
+    f = x.shape[1]
+    assert m % block_rows == 0, "pad idx to a multiple of block_rows"
+    grid = (m // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_scatter_kernel, block_rows=block_rows),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,           # idx lives in SMEM
+            grid=grid,
+            in_specs=[pl.BlockSpec((block_rows, f), lambda t, idx: (t, 0))],
+            # whole output resident: every grid step may touch any row
+            out_specs=pl.BlockSpec((n_out, f), lambda t, idx: (0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_out, f), x.dtype),
+        interpret=interpret,
+    )(idx, x)
+
+
+def _slab_extract_kernel(start_ref, buf_ref, o_ref, *, rows: int):
+    s0 = start_ref[0]
+    o_ref[...] = buf_ref[pl.ds(s0, rows), :]
+
+
+def slab_extract_kernel(buf: jax.Array, start: jax.Array, rows: int, *,
+                        interpret: bool = False) -> jax.Array:
+    """Contiguous (rows, F) slab of ``buf`` at dynamic row ``start``.
+
+    ``start`` is a (1,) int32 array — typically a traced per-device value
+    inside ``shard_map`` — prefetched to SMEM before the copy runs.
+    """
+    f = buf.shape[1]
+    return pl.pallas_call(
+        functools.partial(_slab_extract_kernel, rows=rows),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,           # start lives in SMEM
+            grid=(1,),
+            in_specs=[pl.BlockSpec(buf.shape, lambda t, s: (0, 0))],
+            out_specs=pl.BlockSpec((rows, f), lambda t, s: (0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((rows, f), buf.dtype),
+        interpret=interpret,
+    )(start, buf)
+
+
+def _slab_merge_kernel(start_ref, valid_ref, buf_ref, slab_ref, o_ref, *,
+                       rows: int):
+    o_ref[...] = buf_ref[...]
+    s0 = start_ref[0]
+    nv = valid_ref[0]
+    cur = o_ref[pl.ds(s0, rows), :]
+    mask = (jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0) < nv)
+    o_ref[pl.ds(s0, rows), :] = jnp.where(mask, slab_ref[...], cur)
+
+
+def slab_merge_kernel(buf: jax.Array, slab: jax.Array, start: jax.Array,
+                      valid: jax.Array, *,
+                      interpret: bool = False) -> jax.Array:
+    """Merge the ``valid``-row prefix of ``slab`` into ``buf`` at dynamic
+    row ``start`` (rows >= valid keep buf's data).  ``start`` and
+    ``valid`` are (1,) int32 arrays (traced per-device values)."""
+    rows, f = slab.shape
+    return pl.pallas_call(
+        functools.partial(_slab_merge_kernel, rows=rows),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,           # start, valid live in SMEM
+            grid=(1,),
+            in_specs=[pl.BlockSpec(buf.shape, lambda t, s, v: (0, 0)),
+                      pl.BlockSpec((rows, f), lambda t, s, v: (0, 0))],
+            out_specs=pl.BlockSpec(buf.shape, lambda t, s, v: (0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct(buf.shape, buf.dtype),
+        interpret=interpret,
+    )(start, valid, buf, slab)

@@ -1,5 +1,6 @@
-"""Jit'd wrappers for the ragged gather kernel (gatherv pack / MoE
-dispatch).  interpret=True on CPU; compiled Pallas on TPU."""
+"""Jit'd wrappers for the ragged pack/unpack/slab kernels (gatherv pack,
+scatterv unpack, per-ppermute slab copies, MoE dispatch).
+interpret=True on CPU; compiled Pallas on TPU."""
 from __future__ import annotations
 
 import functools
@@ -7,7 +8,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .kernel import ragged_gather_kernel
+from .kernel import (ragged_gather_kernel, ragged_scatter_kernel,
+                     slab_extract_kernel, slab_merge_kernel)
 from .ref import build_pack_index
 
 
@@ -38,3 +40,60 @@ def pack_blocks(blocks, sizes, total_pad: int, *, block_rows: int = 128,
                             jnp.zeros((1, f), blocks.dtype)], axis=0)
     return ragged_gather(flat, idx, block_rows=block_rows,
                          interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("n_out", "block_rows",
+                                             "interpret"))
+def ragged_scatter(x, idx, n_out: int, *, block_rows: int = 128,
+                   interpret: bool | None = None):
+    """out[idx[i]] = x[i] over a zero (n_out, F) buffer — the unpack dual
+    of :func:`ragged_gather`.  Rows whose idx is out of [0, n_out) are
+    dropped onto an internal trash row."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    pad = (-idx.shape[0]) % block_rows
+    idx_p = jnp.pad(idx, (0, pad), constant_values=n_out)
+    # out-of-range destinations -> internal trash row n_out (sliced off)
+    idx_p = jnp.where((idx_p >= 0) & (idx_p < n_out), idx_p,
+                      n_out).astype(jnp.int32)
+    x_p = jnp.pad(x, ((0, pad), (0, 0)))
+    out = ragged_scatter_kernel(x_p, idx_p, n_out + 1,
+                                block_rows=block_rows, interpret=interpret)
+    return out[:n_out]
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "block_rows",
+                                             "interpret"))
+def unpack_blocks(packed, sizes, cap: int, *, block_rows: int = 128,
+                  interpret: bool | None = None):
+    """Unpack a contiguous (total_pad, F) rank-ordered buffer into padded
+    (N, cap, F) blocks — the scatterv-side inverse of
+    :func:`pack_blocks`, reusing the SAME index map: pack reads flat row
+    ``pack_idx[r]`` into packed row ``r``, so unpack scatters packed row
+    ``r`` back to flat row ``pack_idx[r]``."""
+    total_pad, f = packed.shape
+    n = sizes.shape[0]
+    idx = build_pack_index(sizes, cap, total_pad)  # sentinel = n*cap (trash)
+    flat = ragged_scatter(packed, idx, n * cap + 1, block_rows=block_rows,
+                          interpret=interpret)
+    return flat[: n * cap].reshape(n, cap, f)
+
+
+def slab_extract(buf, start, rows: int, *, interpret: bool | None = None):
+    """Contiguous (rows, F) slab of ``buf`` at traced row ``start`` via the
+    Pallas copy kernel (data-plane send-side).  NOT jit-wrapped: it is
+    called inside ``shard_map`` bodies that are already traced."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    s = jnp.asarray(start, jnp.int32).reshape(1)
+    return slab_extract_kernel(buf, s, rows, interpret=interpret)
+
+
+def slab_merge(buf, slab, start, valid, *, interpret: bool | None = None):
+    """Merge the ``valid``-row prefix of ``slab`` into ``buf`` at traced
+    row ``start`` via the Pallas copy kernel (data-plane receive-side)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    s = jnp.asarray(start, jnp.int32).reshape(1)
+    v = jnp.asarray(valid, jnp.int32).reshape(1)
+    return slab_merge_kernel(buf, slab, s, v, interpret=interpret)

@@ -1,6 +1,7 @@
-"""Pure-jnp oracle for the ragged row gather."""
+"""Pure-jnp oracles for the ragged pack/unpack/slab kernels."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -9,6 +10,40 @@ def ragged_gather_ref(x: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
     zero row-0 sentinel for padding)."""
     safe = jnp.clip(idx, 0, x.shape[0] - 1)
     return jnp.take(x, safe, axis=0)
+
+
+def ragged_scatter_ref(x: jnp.ndarray, idx: jnp.ndarray,
+                       n_out: int) -> jnp.ndarray:
+    """out[idx[i]] = x[i] over a zero (n_out, F) buffer.  Same contract as
+    ``ops.ragged_scatter``: rows whose idx is outside [0, n_out) are
+    DROPPED (routed to a trash row, sliced off).  Duplicate in-range
+    destinations are unspecified-order in both implementations — the
+    data-plane index maps are injective, so callers never rely on it."""
+    safe = jnp.where((idx >= 0) & (idx < n_out), idx, n_out)
+    out = jnp.zeros((n_out + 1, x.shape[1]), x.dtype)
+    return out.at[safe].set(x, mode="drop", unique_indices=False)[:n_out]
+
+
+def slab_extract_ref(buf: jnp.ndarray, start, rows: int) -> jnp.ndarray:
+    """Contiguous (rows, F) slab of ``buf`` at (possibly traced) row
+    ``start``."""
+    start = jnp.asarray(start, jnp.int32).reshape(())
+    return jax.lax.dynamic_slice(buf, (start, jnp.int32(0)),
+                                 (rows, buf.shape[1]))
+
+
+def slab_merge_ref(buf: jnp.ndarray, slab: jnp.ndarray, start,
+                   valid) -> jnp.ndarray:
+    """Merge the ``valid``-row prefix of ``slab`` into ``buf`` at row
+    ``start``; rows >= valid keep buf's data."""
+    start = jnp.asarray(start, jnp.int32).reshape(())
+    valid = jnp.asarray(valid, jnp.int32).reshape(())
+    rows = slab.shape[0]
+    cur = jax.lax.dynamic_slice(buf, (start, jnp.int32(0)),
+                                (rows, buf.shape[1]))
+    mask = (jnp.arange(rows, dtype=jnp.int32) < valid)[:, None]
+    return jax.lax.dynamic_update_slice(buf, jnp.where(mask, slab, cur),
+                                        (start, jnp.int32(0)))
 
 
 def pack_blocks_ref(blocks: jnp.ndarray, sizes: jnp.ndarray,

@@ -26,6 +26,7 @@ from .calibrate import (Calibration, MeshTimingBackend,  # noqa: F401
                         OnlineCalibrator, SyntheticTimingBackend, calibrate,
                         fit_alpha_beta)
 from .candidates import (Candidate, OPS,  # noqa: F401
-                         enumerate_candidates, plan_step_cost)
+                         enumerate_candidates, plan_pipeline_cost,
+                         plan_step_cost)
 from .select import Selection, argmin_name, select  # noqa: F401
 from .service import PlanRecord, PlannerService  # noqa: F401

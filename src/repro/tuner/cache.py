@@ -28,7 +28,7 @@ import pickle
 from collections import OrderedDict
 from dataclasses import dataclass
 
-CACHE_VERSION = 1
+CACHE_VERSION = 2  # v2: plans carry pipeline fields (segments/stage_ids)
 PICKLE_PROTOCOL = 4  # fixed: byte-identical round-trips across sessions
 
 _UNLOADED = object()  # sentinel: entry known from the index, not yet read

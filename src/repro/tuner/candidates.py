@@ -51,6 +51,7 @@ class Candidate:
     builder: Callable[[], object] = field(repr=False)  # tree/schedule/plan
     bytes_exact: int = 0
     bucket_rounds: int = 1
+    segments: int = 1                     # pipeline segment count S
 
     def cost(self, params: CostParams) -> float:
         params.validate()
@@ -84,6 +85,38 @@ def plan_step_cost(plan, params: CostParams, congestion: float = 1.0) -> float:
     for perm, payload, *_rest in plan.steps:
         spill = (len(perm) - 1) * payload / plan.p
         total += params.alpha + params.beta * (payload + congestion * spill)
+    return total
+
+
+def plan_pipeline_cost(plan, params: CostParams,
+                       congestion: float = 1.0) -> float:
+    """Stage-synchronous cost of a PIPELINED lowered plan.
+
+    Steps sharing a pipeline stage (``plan.stage_ids``) carry disjoint
+    row chunks with no intra-stage dependencies (``repro.core.pipeline``),
+    so their transfers overlap on the fabric: a stage pays one startup per
+    ppermute it issues (waves/buckets still serialize their launches) but
+    its bandwidth term is the LARGEST step payload, with the remaining
+    concurrent padded traffic amortized over the ``p`` per-device links at
+    ``congestion`` strength — the same shared-fabric term as
+    ``plan_step_cost``.  On a one-step stage this reduces exactly to
+    ``plan_step_cost``'s per-step charge, so monolithic single-wave plans
+    cost identically under both views; the views only diverge where the
+    pipeline actually overlaps rounds.
+    """
+    params.validate()
+    stage_ids = plan.stage_ids or tuple(range(len(plan.steps)))
+    stages: dict[int, list] = {}
+    for sid, step in zip(stage_ids, plan.steps):
+        stages.setdefault(sid, []).append(step)
+    total = 0.0
+    for sid in sorted(stages):
+        steps = stages[sid]
+        payloads = [payload * len(perm) for perm, payload, *_ in steps]
+        biggest = max(payload for _, payload, *_ in steps)
+        spill = (sum(payloads) - biggest) / plan.p
+        total += (params.alpha * len(steps)
+                  + params.beta * (biggest + congestion * spill))
     return total
 
 
@@ -161,10 +194,19 @@ def rooted_model_candidates(op: str, m, root: int, params: CostParams,
 
 
 def rooted_dataplane_candidates(op: str, m, root: int,
-                                buckets=(1, 2, 4)) -> list[Candidate]:
+                                buckets=(1, 2, 4),
+                                segments=(1,)) -> list[Candidate]:
     """Lowered-plan view: only executable schedules, costed by their padded
     ppermute steps.  The linear tree legalizes into serialized waves, so
-    its step count (p-1 startups) is faithfully represented."""
+    its step count (p-1 startups) is faithfully represented.
+
+    ``segments`` adds pipelined TUW variants (``tuw(b=1,S=s)``): the same
+    tree lowered through ``repro.core.pipeline`` with ``s`` global chunks,
+    costed stage-synchronously by :func:`plan_pipeline_cost` (overlapped
+    stages) instead of the serialized per-step charge — pipelined plans
+    ARE executed stage-by-stage, so each view prices its own execution
+    discipline.
+    """
     from repro.core.jax_collectives import plan_gatherv
 
     if op not in ("gatherv", "scatterv"):
@@ -181,6 +223,15 @@ def rooted_dataplane_candidates(op: str, m, root: int,
                 cost_fn=lambda P, pl=plan: plan_step_cost(pl, P),
                 builder=lambda pl=plan: pl,
                 bytes_exact=plan.tree_bytes_exact, bucket_rounds=b))
+    for s in segments:
+        if s <= 1:
+            continue  # S=1 is exactly tuw(b=1) above
+        plan = plan_gatherv(m, root, tree=tuw, segments=s)
+        out.append(Candidate(
+            f"tuw(b=1,S={s})", op, True,
+            cost_fn=lambda P, pl=plan: plan_pipeline_cost(pl, P),
+            builder=lambda pl=plan: pl,
+            bytes_exact=plan.tree_bytes_exact, segments=s))
     return out
 
 
@@ -189,22 +240,30 @@ def rooted_dataplane_candidates(op: str, m, root: int,
 # --------------------------------------------------------------------------
 
 def composed_dataplane_candidates(op: str, arg, root: int | None = None,
-                                  buckets=(1, 2, 4)) -> list[Candidate]:
+                                  buckets=(1, 2, 4),
+                                  segments=(1,)) -> list[Candidate]:
     """``bucket_rounds`` variants of the composed TUW schedules, costed on
     their lowered plans.  Bucketing trades startups (more ppermutes) for
     padding (smaller payloads) — a pure α-β tradeoff the selector decides
     per regime.  The schedule is built once and shared across variants.
+
+    ``segments`` adds pipelined variants (``tuw_composed(b=1,S=s)``)
+    lowered through ``repro.core.pipeline`` and costed stage-synchronously
+    (:func:`plan_pipeline_cost`) — for allgatherv these collapse the
+    broadcast phase's repeated full-buffer β term, which is where
+    pipelining pays the most.
     """
     from repro.core.jax_collectives import plan_allgatherv, plan_alltoallv
 
     if op == "allgatherv":
         schedule = allgatherv_schedule([int(x) for x in arg], root=root)
-        lower = lambda b: plan_allgatherv(arg, root=root, bucket_rounds=b,
-                                          schedule=schedule)
+        lower = lambda b, s=1: plan_allgatherv(arg, root=root,
+                                               bucket_rounds=b, segments=s,
+                                               schedule=schedule)
     elif op == "alltoallv":
         schedule = alltoallv_schedule(np.asarray(arg, np.int64))
-        lower = lambda b: plan_alltoallv(arg, bucket_rounds=b,
-                                         schedule=schedule)
+        lower = lambda b, s=1: plan_alltoallv(arg, bucket_rounds=b,
+                                              segments=s, schedule=schedule)
     else:
         raise ValueError(op)
     out = []
@@ -215,15 +274,26 @@ def composed_dataplane_candidates(op: str, arg, root: int | None = None,
             cost_fn=lambda P, pl=plan: plan_step_cost(pl, P),
             builder=lambda pl=plan: pl,
             bytes_exact=plan.tree_bytes_exact, bucket_rounds=b))
+    for s in segments:
+        if s <= 1:
+            continue  # S=1 is exactly tuw_composed(b=1) above
+        plan = lower(1, s)
+        out.append(Candidate(
+            f"tuw_composed(b=1,S={s})", op, True,
+            cost_fn=lambda P, pl=plan: plan_pipeline_cost(pl, P),
+            builder=lambda pl=plan: pl,
+            bytes_exact=plan.tree_bytes_exact, segments=s))
     return out
 
 
 def enumerate_candidates(op: str, arg, root: int | None,
                          params: CostParams, view: str = "model",
                          include_extensions: bool = False,
-                         buckets=(1, 2, 4)) -> list[Candidate]:
+                         buckets=(1, 2, 4),
+                         segments=(1,)) -> list[Candidate]:
     """All candidates for one problem.  ``arg`` is the size vector (rooted
-    and allgatherv ops) or the p x p size matrix (alltoallv)."""
+    and allgatherv ops) or the p x p size matrix (alltoallv); ``segments``
+    adds pipelined data-plane variants (``S > 1`` entries only)."""
     if op not in OPS:
         raise ValueError(f"unknown op {op!r}; expected one of {OPS}")
     if view not in ("model", "dataplane"):
@@ -234,7 +304,8 @@ def enumerate_candidates(op: str, arg, root: int | None,
         if view == "model":
             return rooted_model_candidates(op, arg, root, params,
                                            include_extensions)
-        return rooted_dataplane_candidates(op, arg, root, buckets)
+        return rooted_dataplane_candidates(op, arg, root, buckets, segments)
     # composed ops have a single machine view: the schedule IS the
     # round-synchronous data plane (simulate_composed == bucket-1 steps)
-    return composed_dataplane_candidates(op, arg, root=root, buckets=buckets)
+    return composed_dataplane_candidates(op, arg, root=root, buckets=buckets,
+                                         segments=segments)

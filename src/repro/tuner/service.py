@@ -92,6 +92,7 @@ class PlannerService:
                  max_cached_plans: int = 256,
                  max_compiled: int = 64,
                  buckets=(1, 2, 4),
+                 segments=(1, 2, 4, 8),
                  hysteresis: float = 0.05,
                  measure=None, top_k: int = 3,
                  calibrator: OnlineCalibrator | None = None):
@@ -107,6 +108,7 @@ class PlannerService:
         self.cache = cache if cache is not None else PlanCache(
             cache_dir, max_entries=max_cached_plans)
         self.buckets = tuple(buckets)
+        self.segments = tuple(segments)
         self.hysteresis = float(hysteresis)
         self.measure = measure
         self.top_k = int(top_k)
@@ -157,7 +159,8 @@ class PlannerService:
                                 self.params.beta * max(1, int(row_bytes)),
                                 self.params.time_unit, "row")
         cands = enumerate_candidates(op, qarg, root, sel_params,
-                                     view="dataplane", buckets=self.buckets)
+                                     view="dataplane", buckets=self.buckets,
+                                     segments=self.segments)
         rb = max(1, int(row_bytes))
         cal = self.calibrator
         if cal is not None:
@@ -222,7 +225,7 @@ class PlannerService:
         import jax
         from jax.sharding import PartitionSpec as P
 
-        from repro.compat import shard_map
+        from repro.compat import shard_map_unchecked
         from repro.core import jax_collectives as jc
 
         plan = rec.plan
@@ -236,7 +239,7 @@ class PlannerService:
         body = {"gatherv": jc.gatherv_shard, "scatterv": jc.scatterv_shard,
                 "allgatherv": jc.allgatherv_shard,
                 "alltoallv": jc.alltoallv_shard}[kind]
-        fn = jax.jit(shard_map(
+        fn = jax.jit(shard_map_unchecked(
             lambda xl: body(xl, plan, self.axis),
             mesh=self.mesh, in_specs=P(self.axis), out_specs=P(self.axis)))
         self._compiled[ckey] = fn

@@ -8,8 +8,13 @@ from hypothesis import given, settings, strategies as st
 
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.ragged_gather.ops import pack_blocks, ragged_gather
-from repro.kernels.ragged_gather.ref import pack_blocks_ref, ragged_gather_ref
+from repro.kernels.ragged_gather.ops import (pack_blocks, ragged_gather,
+                                             ragged_scatter, slab_extract,
+                                             slab_merge, unpack_blocks)
+from repro.kernels.ragged_gather.ref import (pack_blocks_ref,
+                                             ragged_gather_ref,
+                                             ragged_scatter_ref,
+                                             slab_extract_ref, slab_merge_ref)
 from repro.kernels.rg_lru.ops import rglru_scan
 from repro.kernels.rg_lru.ref import rglru_scan_ref
 
@@ -50,6 +55,96 @@ def test_pack_blocks_property(n, cap, f, seed):
         np.testing.assert_allclose(np.asarray(got)[off: off + sizes[i]],
                                    blocks[i, : sizes[i]])
         off += sizes[i]
+
+
+# ----------------------------------------------------------- ragged scatter
+
+@pytest.mark.parametrize("dtype", [np.float32, np.int32, np.float16])
+@pytest.mark.parametrize("n_out,f,m,br", [(64, 8, 32, 32), (300, 16, 96, 32),
+                                          (128, 128, 128, 128)])
+def test_ragged_scatter_sweep(dtype, n_out, f, m, br):
+    """Unpack kernel vs jnp oracle over unique destinations (the dataplane
+    case: unpack targets are injective by construction)."""
+    rng = np.random.default_rng(n_out + m)
+    x = jnp.asarray(rng.standard_normal((m, f)) * 10, dtype)
+    idx = jnp.asarray(rng.permutation(n_out)[:m], jnp.int32)
+    got = ragged_scatter(x, idx, n_out, block_rows=br, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ragged_scatter_ref(x, idx, n_out)))
+
+
+def test_ragged_scatter_drops_out_of_range():
+    x = jnp.ones((4, 3), jnp.float32)
+    idx = jnp.asarray([0, 99, -1, 2], jnp.int32)
+    got = np.asarray(ragged_scatter(x, idx, 8, block_rows=4, interpret=True))
+    assert got[0].all() and got[2].all()
+    assert not got[1].any() and not got[3:].any()  # dropped, buffer zero
+    # ref shares the drop contract (kernel-vs-oracle differential holds
+    # even with out-of-range destinations)
+    np.testing.assert_array_equal(
+        got, np.asarray(ragged_scatter_ref(x, idx, 8)))
+
+
+@given(st.integers(min_value=1, max_value=6),
+       st.integers(min_value=1, max_value=24),
+       st.integers(min_value=1, max_value=7),
+       st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=20, deadline=None)
+def test_unpack_inverts_pack_property(n, cap, f, seed):
+    """pack -> unpack round-trips every valid row, zero-size blocks
+    included (the scatterv-side consolidation on TPU)."""
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(0, cap + 1, n).astype(np.int32)
+    sizes[rng.integers(0, n)] = 0  # always exercise a zero-size block
+    blocks = rng.standard_normal((n, cap, f)).astype(np.float32)
+    total_pad = max(1, int(sizes.sum()) + int(rng.integers(0, 8)))
+    packed = pack_blocks(jnp.asarray(blocks), jnp.asarray(sizes), total_pad,
+                         block_rows=32, interpret=True)
+    unpacked = unpack_blocks(packed, jnp.asarray(sizes), cap,
+                             block_rows=32, interpret=True)
+    assert unpacked.shape == (n, cap, f)
+    for i in range(n):
+        np.testing.assert_array_equal(np.asarray(unpacked)[i, : sizes[i]],
+                                      blocks[i, : sizes[i]])
+
+
+# --------------------------------------------------------------- slab copies
+
+@given(st.integers(min_value=1, max_value=64),
+       st.integers(min_value=1, max_value=8),
+       st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=20, deadline=None)
+def test_slab_ops_match_refs_property(rows, f, seed):
+    rng = np.random.default_rng(seed)
+    buf_rows = rows + int(rng.integers(0, 32))
+    buf = jnp.asarray(rng.standard_normal((buf_rows, f)), jnp.float32)
+    slab = jnp.asarray(rng.standard_normal((rows, f)), jnp.float32)
+    start = int(rng.integers(0, buf_rows - rows + 1))
+    valid = int(rng.integers(0, rows + 1))
+    got_e = slab_extract(buf, start, rows, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got_e),
+                                  np.asarray(slab_extract_ref(buf, start,
+                                                              rows)))
+    got_m = slab_merge(buf, slab, start, valid, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got_m),
+                                  np.asarray(slab_merge_ref(buf, slab, start,
+                                                            valid)))
+
+
+def test_slab_ops_accept_traced_offsets():
+    """The dataplane calls the slab kernels with traced per-device offsets
+    (axis_index table lookups) — must trace and compile under jit."""
+    buf = jnp.asarray(np.arange(40, dtype=np.float32).reshape(10, 4))
+    slab = jnp.full((3, 4), -1.0, jnp.float32)
+
+    @jax.jit
+    def f(buf, s, v):
+        return slab_merge(buf, slab, s, v, interpret=True)
+
+    got = np.asarray(f(buf, jnp.int32(2), jnp.int32(2)))
+    want = np.asarray(buf).copy()
+    want[2:4] = -1.0
+    np.testing.assert_array_equal(got, want)
 
 
 # ---------------------------------------------------------- flash attention

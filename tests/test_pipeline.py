@@ -1,0 +1,261 @@
+"""Pipelined (segmented) dataplane tests.
+
+The load-bearing property is DIFFERENTIAL: for every op and every segment
+count, the pipelined plan's step tables must produce byte-identical
+results to the monolithic plan — executed here through the pure-NumPy
+step oracle (``repro.core.pipeline.execute_steps_numpy``), so p=64 runs
+in the fast lane without devices.  The real-mesh SPMD equivalence runs in
+the slow multidevice child (``tests/multidevice/child_pipeline.py``).
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.costmodel import CostParams, simulate_pipelined
+from repro.core.jax_collectives import (plan_allgatherv, plan_alltoallv,
+                                        plan_gatherv)
+from repro.core.pipeline import (execute_scatter_steps_numpy,
+                                 execute_steps_numpy, num_stages,
+                                 pipeline_rounds, segment_bounds)
+from repro.tuner import PlannerService, plan_pipeline_cost, plan_step_cost
+
+CHILD = os.path.join(os.path.dirname(__file__), "multidevice",
+                     "child_pipeline.py")
+
+PS = [2, 3, 8, 64]
+SS = [1, 2, 4]
+
+
+# ------------------------------------------------------- transform invariants
+
+@given(st.integers(min_value=0, max_value=10_000),
+       st.integers(min_value=1, max_value=16))
+@settings(max_examples=40, deadline=None)
+def test_segment_bounds_partition(total, S):
+    bounds = segment_bounds(total, S)
+    assert len(bounds) == S
+    assert bounds[0][0] == 0 and bounds[-1][1] == total
+    for (alo, ahi), (blo, bhi) in zip(bounds, bounds[1:]):
+        assert ahi == blo and ahi - alo >= bhi - blo >= 0
+    assert max(hi - lo for lo, hi in bounds) - \
+        min(hi - lo for lo, hi in bounds) <= 1
+
+
+@given(st.integers(min_value=0, max_value=100_000),
+       st.integers(min_value=2, max_value=63),
+       st.integers(min_value=1, max_value=8))
+@settings(max_examples=30, deadline=None)
+def test_pipeline_rounds_partitions_every_transfer(seed, p, S):
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(0, 200, p)
+    plan_rounds = []
+    tree_plan = plan_gatherv(sizes, int(rng.integers(0, p)))
+    # reconstruct rounds from the monolithic plan's steps (1 step = 1 round
+    # for TUW) and re-time them
+    for perm, payload, send_start, recv_start, recv_valid in tree_plan.steps:
+        plan_rounds.append([(s, d, int(recv_valid[d]), int(send_start[s]))
+                            for s, d in perm])
+    total = int(sizes.sum())
+    stages = pipeline_rounds(plan_rounds, S, total)
+    assert len(stages) == (len(plan_rounds) + S - 1 if plan_rounds else 0)
+    # every original transfer is exactly partitioned by its pieces, and a
+    # piece of round k's chunk j sits at stage k + j
+    bounds = segment_bounds(total, S)
+    got = {}
+    for t, stage in enumerate(stages):
+        for src, dst, size, start in stage:
+            assert size > 0
+            j = next(i for i, (lo, hi) in enumerate(bounds)
+                     if lo <= start < hi)
+            k = t - j
+            assert 0 <= k < len(plan_rounds)
+            got.setdefault((src, dst, k), []).append((start, size))
+    for k, rnd in enumerate(plan_rounds):
+        for src, dst, size, start in rnd:
+            pieces = sorted(got.get((src, dst, k), []))
+            assert sum(sz for _, sz in pieces) == size
+            cur = start
+            for st_, sz in pieces:
+                assert st_ == cur
+                cur += sz
+    assert num_stages(len(plan_rounds), S) == len(stages) or not plan_rounds
+
+
+# ----------------------------------------------------- differential (no mesh)
+
+def _blocks(rng, sizes, F=2):
+    return [rng.integers(0, 1_000_000, (int(s), F)) for s in sizes]
+
+
+def _concat(blocks, F=2):
+    live = [b for b in blocks if len(b)]
+    return (np.concatenate(live, axis=0) if live
+            else np.zeros((0, F), np.int64))
+
+
+@pytest.mark.parametrize("p", PS)
+@pytest.mark.parametrize("S", SS)
+def test_pipelined_gatherv_scatterv_differential(p, S):
+    rng = np.random.default_rng(p * 97 + S)
+    sizes = rng.integers(0, 50, p)
+    if p > 2:
+        sizes[rng.integers(0, p)] = 0  # zero blocks must stay legal
+    root = int(rng.integers(0, p))
+    F = 2
+    blocks = _blocks(rng, sizes, F)
+    truth = _concat(blocks, F)
+    plan = plan_gatherv(sizes, root, segments=S)
+    assert plan.segments == S
+    bufs = np.zeros((p, plan.buf_rows, F), np.int64)
+    for i, b in enumerate(blocks):
+        bufs[i, plan.offsets[i]: plan.offsets[i] + len(b)] = b
+    out = execute_steps_numpy(plan.steps, bufs)
+    np.testing.assert_array_equal(out[root, : plan.total], truth)
+    # scatter is the reversed walk over the same tables
+    down = np.zeros((p, plan.buf_rows, F), np.int64)
+    down[root, : plan.total] = truth
+    sc = execute_scatter_steps_numpy(plan, down)
+    for i in range(p):
+        np.testing.assert_array_equal(
+            sc[i, plan.offsets[i]: plan.offsets[i] + sizes[i]], blocks[i])
+
+
+@pytest.mark.parametrize("p", PS)
+@pytest.mark.parametrize("S", SS)
+def test_pipelined_allgatherv_differential(p, S):
+    rng = np.random.default_rng(p * 131 + S)
+    sizes = rng.integers(0, 40, p)
+    F = 2
+    blocks = _blocks(rng, sizes, F)
+    truth = _concat(blocks, F)
+    plan = plan_allgatherv(sizes, segments=S)
+    bufs = np.zeros((p, plan.buf_rows, F), np.int64)
+    for i, b in enumerate(blocks):
+        bufs[i, plan.in_starts[i]: plan.in_starts[i] + len(b)] = b
+    out = execute_steps_numpy(plan.steps, bufs)
+    for j in range(p):
+        np.testing.assert_array_equal(out[j, : plan.total], truth)
+
+
+@pytest.mark.parametrize("p", [2, 3, 8, 16])
+@pytest.mark.parametrize("S", SS)
+def test_pipelined_alltoallv_differential(p, S):
+    rng = np.random.default_rng(p * 173 + S)
+    S_mat = rng.integers(0, 30, (p, p))
+    S_mat[rng.integers(0, p)] = 0  # one silent source
+    F = 2
+    blocks = [[rng.integers(0, 1_000_000, (int(S_mat[i][j]), F))
+               for j in range(p)] for i in range(p)]
+    plan = plan_alltoallv(S_mat, segments=S)
+    bufs = np.zeros((p, plan.buf_rows, F), np.int64)
+    for i in range(p):
+        off = plan.in_starts[i]
+        for j in range(p):
+            bufs[i, off: off + len(blocks[i][j])] = blocks[i][j]
+            off += len(blocks[i][j])
+    fin = execute_steps_numpy(plan.steps, bufs)
+    out = np.zeros((p, plan.out_rows, F), np.int64)
+    for src_start, dst_start, valid in plan.extract:
+        for i in range(p):
+            nv = int(valid[i])
+            if nv:
+                out[i, dst_start[i]: dst_start[i] + nv] = \
+                    fin[i, src_start[i]: src_start[i] + nv]
+    for j in range(p):
+        want = _concat([blocks[i][j] for i in range(p)], F)
+        np.testing.assert_array_equal(out[j, : plan.out_valid[j]], want)
+
+
+def test_pipelined_plan_moves_exactly_the_monolithic_bytes():
+    rng = np.random.default_rng(5)
+    sizes = rng.integers(0, 500, 32)
+    mono = plan_gatherv(sizes, 7)
+    for S in (2, 4, 8):
+        pipe = plan_gatherv(sizes, 7, segments=S)
+        assert pipe.tree_bytes_exact == mono.tree_bytes_exact
+        assert pipe.num_stages == mono.num_stages + S - 1
+        assert pipe.stage_ids == tuple(sorted(pipe.stage_ids))
+        assert len(pipe.stage_ids) == len(pipe.steps)
+        assert max(pipe.stage_ids) < pipe.num_stages
+
+
+# ----------------------------------------------------------- cost model view
+
+def test_pipeline_cost_reduces_to_step_cost_on_monolithic_plans():
+    P = CostParams(1e-6, 2e-11, "s", "byte")
+    sizes = [4096] * 16
+    plan = plan_gatherv(sizes, 0)
+    assert plan_pipeline_cost(plan, P) == pytest.approx(
+        plan_step_cost(plan, P))
+    ag = plan_allgatherv(sizes)
+    assert plan_pipeline_cost(ag, P) == pytest.approx(plan_step_cost(ag, P))
+
+
+def test_pipelining_collapses_broadcast_beta_term():
+    """Theorem-1 behavior on the streamed data plane: allgatherv's
+    broadcast phase repeats the full buffer each round, so pipelined β
+    approaches one buffer's worth while monolithic pays d buffers."""
+    P = CostParams(1e-6, 2e-11, "s", "byte")
+    m = [1_000_000] * 16
+    mono = plan_pipeline_cost(plan_allgatherv(m), P)
+    pipe = plan_pipeline_cost(plan_allgatherv(m, segments=8), P)
+    assert pipe < 0.6 * mono
+    # tiny messages: extra startups dominate, monolithic must win
+    tiny_mono = plan_pipeline_cost(plan_allgatherv([8] * 16), P)
+    tiny_pipe = plan_pipeline_cost(plan_allgatherv([8] * 16, segments=8), P)
+    assert tiny_mono < tiny_pipe
+
+
+def test_simulate_pipelined_matches_closed_form_on_a_chain():
+    """One transfer per round, all full-size: T = (R+S-1)(α + β·m/S)
+    exactly when S divides m (equal chunks)."""
+    P = CostParams(1.0, 0.5, "us", "unit")
+    m, R, S = 64, 3, 4
+    rounds = [[(r, r + 1, m, 0)] for r in range(R)]
+    got = simulate_pipelined(rounds, m, P, S)
+    want = (R + S - 1) * (P.alpha + P.beta * m / S)
+    assert got == pytest.approx(want)
+    # S=1 degenerates to the round-synchronous sum
+    assert simulate_pipelined(rounds, m, P, 1) == pytest.approx(
+        R * (P.alpha + P.beta * m))
+
+
+# ------------------------------------------------------------ tuner coupling
+
+def test_tuner_selects_pipelined_for_large_messages_only():
+    svc = PlannerService(quantum=128)
+    small = svc.plan_record("allgatherv", [64] * 16, row_bytes=4)
+    assert small.plan.segments == 1, small.algo
+    big = svc.plan_record("allgatherv", [4_000_000] * 16, row_bytes=4)
+    assert big.plan.segments > 1, big.algo
+    assert "S=" in big.algo
+    # the scoreboard carries every pipelined variant
+    names = {n for n, _ in big.costs}
+    assert {"tuw_composed(b=1,S=2)", "tuw_composed(b=1,S=4)",
+            "tuw_composed(b=1,S=8)"} <= names
+
+
+def test_pipelined_plans_round_trip_the_cache(tmp_path):
+    cache_dir = str(tmp_path / "plans")
+    svc1 = PlannerService(quantum=128, cache_dir=cache_dir)
+    r1 = svc1.plan_record("allgatherv", [4_000_000] * 16, row_bytes=4)
+    svc2 = PlannerService(quantum=128, cache_dir=cache_dir)
+    r2 = svc2.plan_record("allgatherv", [4_000_000] * 16, row_bytes=4)
+    assert (svc2.plan_hits, svc2.plan_misses) == (1, 0)
+    assert r2.plan.segments == r1.plan.segments > 1
+    assert r2.plan.stage_ids == r1.plan.stage_ids
+
+
+# ------------------------------------------------------- multi-device child
+
+@pytest.mark.slow
+def test_multidevice_pipelined(child_env):
+    res = subprocess.run(
+        [sys.executable, CHILD], env=child_env, capture_output=True,
+        text=True, timeout=600)
+    assert res.returncode == 0, f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+    assert "ALL MULTIDEVICE PIPELINE CHECKS PASSED" in res.stdout
