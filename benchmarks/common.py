@@ -49,3 +49,39 @@ def emit(rows, file=sys.stdout):
     """CSV per harness contract: name,us_per_call,derived."""
     for name, us, derived in rows:
         print(f"{name},{us:.2f},{derived}", file=file)
+
+
+def moe_load_fractions(p: int, shape: str, seed: int = 0):
+    """The canonical MoE expert-load shapes used by the fast-path bench,
+    the e2e bench, and the tests — ONE definition so they all validate
+    the same matrices.  ``uniform``: balanced; ``single_hot``: one expert
+    takes half the traffic; ``zipf``: loads ~ 1/rank^1.2, shuffled."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    if shape == "uniform":
+        return np.full(p, 1.0 / p)
+    if shape == "single_hot":
+        frac = np.full(p, 0.5 / (p - 1))
+        frac[min(3, p - 1)] = 0.5
+        return frac
+    if shape == "zipf":
+        w = 1.0 / np.arange(1, p + 1) ** 1.2
+        return rng.permutation(w / w.sum())
+    raise ValueError(shape)
+
+
+def moe_dispatch_matrix(p: int, tokens: int, shape: str,
+                        seed: int = 0):
+    """S[i][j]: token rows shard ``i`` sends to expert ``j`` — each
+    expert's load split as evenly as possible over the p source shards
+    (every expert serves at least one token)."""
+    import numpy as np
+
+    S = np.zeros((p, p), np.int64)
+    for j, f in enumerate(moe_load_fractions(p, shape, seed)):
+        tj = max(1, int(f * tokens))
+        base, rem = divmod(tj, p)
+        S[:, j] = base
+        S[:rem, j] += 1
+    return S

@@ -22,7 +22,12 @@ pipelining rarely wins; the bench reports that honestly instead of
 asserting a win.
 
 A final section runs a large-message signature through ``PlannerService``
-and asserts the service selects a pipelined plan (S > 1) for it.
+and asserts the service selects a pipelined plan (S > 1) for it, and the
+``alltoallv_moe`` section sweeps the zipf MoE dispatch signature,
+asserting the fast-path properties: the tuner selects an S > 1 alltoallv
+plan (per-tree segmentation made the stages real), payload-binned waves
+cut ``padding_overhead`` on the skewed matrix, and pipelined plans stay
+byte-identical to monolithic ones.
 
 Writes ``results/pipeline_bench.json`` (schema: EXPERIMENTS.md §Pipeline
 bench):
@@ -41,9 +46,9 @@ if __package__ in (None, ""):  # direct-script execution
     for _p in (_REPO, os.path.join(_REPO, "src")):
         if _p not in sys.path:
             sys.path.insert(0, _p)
-    from benchmarks.common import emit
+    from benchmarks.common import emit, moe_dispatch_matrix
 else:
-    from .common import emit
+    from .common import emit, moe_dispatch_matrix
 
 from repro.core.costmodel import CostParams
 from repro.tuner import (PlannerService, SyntheticTimingBackend,
@@ -146,6 +151,88 @@ def tuner_section(rows: list) -> dict:
             "tiny_selected": tiny.algo, "tiny_segments": tiny.plan.segments}
 
 
+def alltoallv_moe_section(assumed: CostParams,
+                          machine: SyntheticTimingBackend,
+                          rows: list) -> dict:
+    """The MoE fast path: per-tree-segmented, payload-binned alltoallv.
+
+    Sweeps token scales of the zipf dispatch signature (d_model=2048
+    bf16 rows) and reports, per scale, the best monolithic plan vs the
+    best pipelined (S > 1) plan under both the tuner's predicted cost
+    and the synthetic machine.  Asserts the tentpole properties:
+
+    * the service SELECTS an S > 1 alltoallv plan on at least one
+      MoE-shaped signature (per-tree segmentation made the stages real);
+    * the selected binned plan's ``padding_overhead`` is measurably below
+      the unbinned single-bin waves on the skewed matrix;
+    * pipelined and monolithic plans of the same schedule move byte-
+      identical exact payloads.
+    """
+    import numpy as np
+
+    from repro.core.jax_collectives import plan_alltoallv
+
+    row_bytes = 2_048 * 2           # bf16 activations, d_model=2048
+    sel_params = CostParams(assumed.alpha, assumed.beta * row_bytes,
+                            assumed.time_unit, "row")
+    svc = PlannerService(quantum=16)
+    scales = []
+    s_selected = None
+    for tokens in (1_024, 16_384, 262_144):
+        S_mat = moe_dispatch_matrix(P, tokens, "zipf")
+        cands = enumerate_candidates("alltoallv", S_mat, None, sel_params,
+                                     view="dataplane", buckets=(1, 2, 4),
+                                     segments=SEGMENTS, wave_bins=(2.0,))
+        pred = {c.name: c.cost(sel_params) for c in cands}
+        meas = {c.name: machine.measure(c, row_bytes=row_bytes)
+                for c in cands}
+        best_pred = min(pred, key=pred.get)
+        best_meas = min(meas, key=meas.get)
+        mono_meas = min(v for k, v in meas.items() if "S=" not in k)
+        pipe_meas = min(v for k, v in meas.items() if "S=" in k)
+        rec = svc.plan_record("alltoallv", S_mat, row_bytes=row_bytes)
+        if rec.plan.segments > 1:
+            s_selected = rec.algo
+        scales.append({
+            "tokens": tokens,
+            "best_predicted": best_pred,
+            "best_measured": best_meas,
+            "selected": rec.algo,
+            "selected_segments": rec.plan.segments,
+            "mono_over_pipe_measured": mono_meas / pipe_meas,
+            "padding_overhead_selected": rec.plan.padding_overhead,
+        })
+        rows.append((
+            f"pipeline/alltoallv_moe/tokens={tokens}",
+            meas[best_meas] * 1e6,
+            f"selected={rec.algo};best_meas={best_meas};"
+            f"mono_over_pipe={mono_meas / pipe_meas:.2f}x"))
+    assert s_selected is not None, (
+        "per-tree segmentation must make the tuner select S > 1 on some "
+        f"MoE-shaped alltoallv signature: {[s['selected'] for s in scales]}")
+    # padding: binned waves vs single-bin waves on the largest skewed matrix
+    S_mat = moe_dispatch_matrix(P, 262_144, "zipf")
+    unbinned = plan_alltoallv(S_mat)
+    binned = plan_alltoallv(S_mat, wave_bin_ratio=2.0)
+    assert binned.padding_overhead < 0.5 * unbinned.padding_overhead, (
+        unbinned.padding_overhead, binned.padding_overhead)
+    # byte identity: pipelining re-times, never changes exact payloads
+    byte_identity = all(
+        plan_alltoallv(S_mat, segments=s).tree_bytes_exact
+        == unbinned.tree_bytes_exact for s in SEGMENTS)
+    assert byte_identity
+    rows.append(("pipeline/alltoallv_moe/padding_overhead",
+                 binned.padding_overhead,
+                 f"unbinned={unbinned.padding_overhead:.3f};"
+                 f"binned={binned.padding_overhead:.3f};"
+                 f"byte_identity={byte_identity}"))
+    return {"p": P, "row_bytes": row_bytes, "scales": scales,
+            "s_gt1_selected": s_selected,
+            "padding_overhead_unbinned": unbinned.padding_overhead,
+            "padding_overhead_binned": binned.padding_overhead,
+            "byte_identity": byte_identity}
+
+
 def run(emit_rows: bool = True, out_path: str | None = None):
     assumed = CostParams.tpu_ici()
     # a deliberately mis-guessed true machine: slower startup, less BW
@@ -165,8 +252,9 @@ def run(emit_rows: bool = True, out_path: str | None = None):
         f"predicted crossover {ag['crossover_rows_predicted']} vs measured "
         f"{ag['crossover_rows_measured']}: more than one grid point apart")
     tuner = tuner_section(rows)
+    moe = alltoallv_moe_section(assumed, machine, rows)
     payload = {
-        "version": 1,
+        "version": 2,
         "assumed_params": _params_json(assumed),
         "true_machine": {"alpha_s": machine.alpha_s,
                          "beta_s_per_byte": machine.beta_s_per_byte,
@@ -174,6 +262,7 @@ def run(emit_rows: bool = True, out_path: str | None = None):
                          "backend": machine.fingerprint()},
         "ops": ops,
         "tuner": tuner,
+        "alltoallv_moe": moe,
     }
     if out_path is None:
         out_path = os.path.join(RESULTS, "pipeline_bench.json")

@@ -1,27 +1,74 @@
 """Benchmark harness entry: one module per paper table/figure plus the
-framework benches.  Prints ``name,us_per_call,derived`` CSV."""
+framework benches.  Prints ``name,us_per_call,derived`` CSV and writes
+one machine-readable ``results/BENCH_summary.json`` aggregating every
+registered bench (schema: EXPERIMENTS.md §Bench summary), so perf can be
+tracked across PRs from a single artifact."""
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
+
+SUMMARY_VERSION = 1
+
+RESULTS = os.path.join(os.environ.get("REPRO_RESULTS", os.getcwd()),
+                       "results")
+
+
+def _row_record(name: str, us: float, derived) -> dict:
+    """One CSV row as a record: the row name's first path component is
+    the op/bench family, the remainder the configuration."""
+    op, _, config = name.partition("/")
+    metrics = {}
+    for part in str(derived).split(";"):
+        k, _, v = part.partition("=")
+        if _ and k:
+            metrics[k] = v
+    return {"name": name, "op": op, "config": config,
+            "us_per_call": float(us), "derived": str(derived),
+            "metrics": metrics}
+
+
+def write_summary(benches: dict[str, list], total_s: float,
+                  out_path: str | None = None) -> str:
+    payload = {
+        "version": SUMMARY_VERSION,
+        "total_seconds": total_s,
+        "benches": {
+            name: [_row_record(*row) for row in rows]
+            for name, rows in benches.items()
+        },
+    }
+    if out_path is None:
+        out_path = os.path.join(RESULTS, "BENCH_summary.json")
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    return out_path
 
 
 def main() -> None:
     from . import extensions_bench, guidelines_bench, jax_runtime, \
-        moe_dispatch, paper_tables, pipeline_bench, roofline, tuner_bench, \
-        variants
+        moe_dispatch, moe_e2e, paper_tables, pipeline_bench, roofline, \
+        tuner_bench, variants
     t0 = time.time()
     print("name,us_per_call,derived")
-    paper_tables.run()
-    variants.run()
-    guidelines_bench.run()
-    extensions_bench.run()
-    moe_dispatch.run()
-    tuner_bench.run(synthetic=True)
-    pipeline_bench.run()
-    jax_runtime.run()
-    roofline.run()
-    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+    benches: dict[str, list] = {}
+    benches["paper_tables"] = paper_tables.run()[0]
+    benches["variants"] = variants.run()[0]
+    benches["guidelines"] = guidelines_bench.run()[0]
+    benches["extensions"] = extensions_bench.run()[0]
+    benches["moe_dispatch"] = moe_dispatch.run()[0]
+    benches["tuner"] = tuner_bench.run(synthetic=True)[0]
+    benches["pipeline"] = pipeline_bench.run()[0]
+    benches["moe_e2e"] = moe_e2e.run()[0]
+    benches["jax_runtime"] = jax_runtime.run()[0]
+    benches["roofline"] = roofline.run()[0]
+    total = time.time() - t0
+    out = write_summary(benches, total)
+    print(f"# total {total:.1f}s", file=sys.stderr)
+    print(f"# wrote {out}", file=sys.stderr)
 
 
 if __name__ == '__main__':

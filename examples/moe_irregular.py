@@ -71,9 +71,10 @@ for j in range(8):
                           axis=0).reshape(-1, cfg.d_model)
     np.testing.assert_allclose(recv[j], want)
 pred = independent_scatter_bytes(S)
-print(f"TUW alltoallv dispatch over mesh{mesh.shape}: OK, "
+algo = svc.last_selection.chosen if svc.last_selection else "cached"
+print(f"alltoallv dispatch over mesh{mesh.shape}: OK ({algo}), "
       f"{plan.tree_bytes_exact} rows moved in {plan.num_rounds} rounds "
-      f"(cost model predicted {pred}, padded {plan.tree_bytes_padded})")
+      f"(TUW cost model predicted {pred}, padded {plan.tree_bytes_padded})")
 pad_rows = 8 * 7 * int(S.max())  # regular alltoall: every block max-padded
 print(f"padded all-to-all alternative: {pad_rows} rows "
       f"({pad_rows / max(plan.tree_bytes_padded, 1):.1f}x more)")

@@ -158,13 +158,34 @@ def _tree_rounds(tree: GatherTree, skip_empty: bool = True):
     return [by[k] for k in sorted(by)]
 
 
-def allgatherv_schedule(m, root: int | None = None) -> ComposedSchedule:
+def allgatherv_schedule(m, root: int | None = None,
+                        broadcast: str = "tree") -> ComposedSchedule:
     """allgatherv = gatherv (free or fixed root) + broadcast of the packed
-    buffer down the reversed tree.  Every device ends with all blocks in
-    rank order at their global offsets."""
+    buffer.  Every device ends with all blocks in rank order at their
+    global offsets.
+
+    ``broadcast`` picks the second phase's topology:
+
+    * ``"tree"`` — the reversed gather tree (binomial-structured):
+      ``<= ceil(log2 p)`` rounds, each edge carrying the FULL packed
+      buffer.  Fewest startups; but the root's send port pushes the whole
+      buffer to each of its ``~log2 p`` children, a serial ``d·β·M`` that
+      NO chunking can collapse (the port is busy regardless of how the
+      payload is sliced).  Right for monolithic execution.
+    * ``"chain"`` — the classic pipelined broadcast: ranks form one chain
+      rooted at the gather root and every node forwards the buffer to its
+      successor.  ``p - 1`` rounds — hopeless monolithically — but every
+      port sends the buffer ONCE, so under segmented execution stage
+      ``t`` moves chunk ``t - k`` over edge ``k`` and the whole broadcast
+      finishes in ``p - 2 + S`` stages of ``M/S``-sized port loads:
+      ``β·M·(p - 2 + S)/S → β·M``, the true pipelined-broadcast collapse
+      (cf. PAT's chain mode).  Right for ``segments > 1``.
+    """
     m = [int(x) for x in m]
     if any(x < 0 for x in m):
         raise ValueError("block sizes must be non-negative")
+    if broadcast not in ("tree", "chain"):
+        raise ValueError(broadcast)
     p = len(m)
     tree = build_gather_tree(m, root=root)
     total = sum(m)
@@ -178,15 +199,22 @@ def allgatherv_schedule(m, root: int | None = None) -> ComposedSchedule:
             for e in edges
         ])
     if total > 0 and p > 1:
-        # broadcast phase: every edge of the reversed tree carries the FULL
-        # packed buffer (all p blocks) from offset 0 — still one consecutive
-        # rank range, so the invariant machinery applies unchanged.
-        for edges in _tree_rounds(tree.reversed_for_scatter(),
-                                  skip_empty=False):
-            sched.rounds.append([
-                Transfer(e.parent, e.child, total, 0, 0, 0, p - 1)
-                for e in edges
-            ])
+        # broadcast phase: every transfer carries the FULL packed buffer
+        # (all p blocks) from offset 0 — still one consecutive rank range,
+        # so the invariant machinery applies unchanged.
+        if broadcast == "tree":
+            for edges in _tree_rounds(tree.reversed_for_scatter(),
+                                      skip_empty=False):
+                sched.rounds.append([
+                    Transfer(e.parent, e.child, total, 0, 0, 0, p - 1)
+                    for e in edges
+                ])
+        else:
+            chain = [tree.root] + [r for r in range(p) if r != tree.root]
+            for k in range(p - 1):
+                sched.rounds.append([
+                    Transfer(chain[k], chain[k + 1], total, 0, 0, 0, p - 1)
+                ])
     return sched
 
 
@@ -252,6 +280,46 @@ def alltoallv_schedule(size_matrix) -> ComposedSchedule:
         # round, so cur is never empty here
         sched.rounds.append(cur)
         g += 1
+    return sched
+
+
+def alltoallv_direct_schedule(size_matrix) -> ComposedSchedule:
+    """alltoallv as p-1 direct pairwise exchange rounds (no forwarding).
+
+    Round ``k`` (1 <= k < p) is the permutation ``i -> (i + k) mod p``:
+    every source sends its block for that destination directly.  This is
+    the classic large-message all-to-all — it moves the EXACT bytes
+    (``sum_{i != j} S[i][j]``, no tree forwarding) at the price of
+    ``p - 1`` startups, so it beats the packed scatter trees exactly
+    where β dominates; the tuner races both.  Zero-size blocks send
+    nothing, and a round that ends up empty is dropped, so sparse MoE
+    matrices pay only for their live pairs.
+
+    The result is a plain :class:`ComposedSchedule` over the same
+    concatenated per-tree flat row space as :func:`alltoallv_schedule`
+    (tree ``i`` = row ``i``, single-block transfers ``lo == hi == j``),
+    so the entire lowering — legalization, payload binning, per-tree
+    pipelining, extraction — applies unchanged.
+    """
+    S = np.asarray(size_matrix, dtype=np.int64)
+    if S.ndim != 2 or S.shape[0] != S.shape[1]:
+        raise ValueError("size matrix must be p x p")
+    if (S < 0).any():
+        raise ValueError("block sizes must be non-negative")
+    p = S.shape[0]
+    row_sums = S.sum(axis=1)
+    row_starts = np.concatenate([[0], np.cumsum(row_sums)[:-1]]).astype(np.int64)
+    sched = ComposedSchedule("alltoallv", p, -1, S, row_starts)
+    for k in range(1, p):
+        rnd = []
+        for i in range(p):
+            j = (i + k) % p
+            size = int(S[i, j])
+            if size > 0:
+                rnd.append(Transfer(i, j, size, sched.flat_offset(i, j),
+                                    i, j, j))
+        if rnd:
+            sched.rounds.append(rnd)
     return sched
 
 

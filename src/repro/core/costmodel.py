@@ -243,7 +243,10 @@ def simulate_pipelined(rounds, total_rows: int, params: CostParams,
     the price of ``S - 1`` extra startups.  The dataplane view of the
     same trade-off (actual lowered steps, congestion-aware) is
     ``repro.tuner.candidates.plan_pipeline_cost``; this function is the
-    machine-model view used by the crossover analysis.
+    machine-model view used by the crossover analysis.  (The PER-TREE
+    re-timing composed alltoallv uses lives in the dataplane view only —
+    ``plan_alltoallv`` + ``plan_pipeline_cost`` — since its whole point
+    is the lowered waves it produces.)
     """
     from .pipeline import pipeline_rounds
 

@@ -71,7 +71,7 @@ from repro.compat import shard_map_unchecked
 
 from .composed import ComposedSchedule, allgatherv_schedule, alltoallv_schedule
 from .pipeline import num_stages as _pipeline_num_stages
-from .pipeline import pipeline_rounds
+from .pipeline import pipeline_rounds, pipeline_rounds_per_tree
 from .treegather import GatherTree, build_gather_tree, ceil_log2
 
 # --------------------------------------------------------------------------
@@ -128,6 +128,7 @@ class GathervPlan:
     segments: int = 1              # pipeline segment count S (1 = monolithic)
     stage_ids: tuple[int, ...] = ()  # pipeline stage of each step (len(steps))
     num_stages: int = 0            # R + S - 1 stages (R for S = 1)
+    wave_bin_ratio: float = 0.0    # payload-bin ratio (0 = fixed-count split)
 
     @property
     def padding_overhead(self) -> float:
@@ -173,18 +174,63 @@ def _legalize_round(transfers):
     return [group for _, _, group in waves]
 
 
-def _bucketed_steps(rounds, p: int, bucket_rounds: int):
+def _wave_groups(wave, bucket_rounds: int, wave_bin_ratio: float):
+    """Split one legalized wave's (size-sorted) transfers into step groups.
+
+    Two policies:
+
+    * ``wave_bin_ratio > 1`` — PAYLOAD-BINNED packing: walk the sorted
+      transfers and open a new group whenever a size exceeds
+      ``wave_bin_ratio`` times the current group's smallest member, i.e.
+      geometric size bins.  Every group's padded bytes are then at most
+      ``wave_bin_ratio`` times its exact bytes, so within-step padding is
+      BOUNDED on arbitrarily skewed size mixes — the fixed-count split
+      below has no such bound (one huge and many tiny transfers in the
+      same bucket still pad everything to the maximum).  Homogeneous
+      waves stay a single group, so uniform matrices pay nothing.
+    * otherwise — the legacy fixed-count split into up to
+      ``bucket_rounds`` equal-count buckets.
+    """
+    if wave_bin_ratio and wave_bin_ratio > 1.0:
+        groups: list[list] = []
+        cur: list = []
+        cur_min = 1
+        for t in wave:
+            if cur and t[2] > cur_min * wave_bin_ratio:
+                groups.append(cur)
+                cur = []
+            if not cur:
+                cur_min = max(1, t[2])
+            cur.append(t)
+        if cur:
+            groups.append(cur)
+        return groups
+    nb = min(bucket_rounds, len(wave))
+    return [[wave[i] for i in idx]
+            for idx in np.array_split(np.arange(len(wave)), nb)
+            if len(idx)]
+
+
+def _bucketed_steps(rounds, p: int, bucket_rounds: int,
+                    wave_bin_ratio: float = 0.0):
     """Lower transfer rounds to ppermute step tables.
 
     ``rounds``: list of rounds (or pipeline stages), each a list of
     ``(src, dst, size, start)``.  Rounds with endpoint conflicts are first
     split into permutation-legal waves (see ``_legalize_round``); each
-    wave then becomes up to ``bucket_rounds`` ppermute steps (pairs split
-    into size buckets: extra latency, less padding).  Returns
-    ``(steps, exact, padded, max_payload, stage_ids)`` where
+    wave then becomes ppermute steps per :func:`_wave_groups` — up to
+    ``bucket_rounds`` equal-count size buckets, or geometric payload bins
+    when ``wave_bin_ratio > 1`` (extra latency, bounded padding).
+    Returns ``(steps, exact, padded, max_payload, stage_ids)`` where
     ``stage_ids[k]`` is the index of the round/stage step ``k`` lowered
-    from — the pipeline cost model groups steps by it.
+    from — the pipeline cost model groups steps by it.  The two split
+    policies are mutually exclusive: asking for both is a conflict, not
+    a composition, and raises.
     """
+    if wave_bin_ratio and wave_bin_ratio > 1.0 and bucket_rounds > 1:
+        raise ValueError(
+            "bucket_rounds > 1 and wave_bin_ratio > 1 are alternative "
+            "wave-split policies; pass one or the other")
     steps = []
     stage_ids = []
     exact = 0
@@ -195,11 +241,7 @@ def _bucketed_steps(rounds, p: int, bucket_rounds: int):
         if not transfers:
             continue
         for wave in _legalize_round(transfers):
-            nb = min(bucket_rounds, len(wave))
-            for idx in np.array_split(np.arange(len(wave)), nb):
-                group = [wave[i] for i in idx]
-                if not group:
-                    continue
+            for group in _wave_groups(wave, bucket_rounds, wave_bin_ratio):
                 payload = max(t[2] for t in group)
                 send_start = np.zeros(p, np.int32)
                 recv_start = np.zeros(p, np.int32)
@@ -220,11 +262,15 @@ def _bucketed_steps(rounds, p: int, bucket_rounds: int):
 
 
 def plan_gatherv(sizes, root: int, tree: GatherTree | None = None,
-                 bucket_rounds: int = 1, segments: int = 1) -> GathervPlan:
+                 bucket_rounds: int = 1, segments: int = 1,
+                 wave_bin_ratio: float = 0.0) -> GathervPlan:
     """Build the SPMD schedule for a gatherv over ``p = len(sizes)`` devices.
 
     ``bucket_rounds > 1`` splits each merge round's pairs into up to that
     many size buckets, each its own ppermute: extra latency, less padding.
+    ``wave_bin_ratio > 1`` uses geometric payload bins instead (see
+    ``_wave_groups``): padded bytes stay within that factor of exact bytes
+    on arbitrarily skewed rounds.
     ``segments > 1`` pipelines the schedule (``repro.core.pipeline``): the
     flat row space is cut into that many global chunks and the chunk-``j``
     piece of a round-``k`` transfer runs at stage ``k + j``, so each
@@ -258,12 +304,13 @@ def plan_gatherv(sizes, root: int, tree: GatherTree | None = None,
     n_rounds = len(rounds)
     rounds = pipeline_rounds(rounds, segments, total)
     steps, exact, padded, max_payload, stage_ids = _bucketed_steps(
-        rounds, p, bucket_rounds)
+        rounds, p, bucket_rounds, wave_bin_ratio)
     buf_rows = total + max(cap, max_payload)
     return GathervPlan(p, root, sizes, offsets, total, cap, buf_rows,
                        steps, exact, padded, segments=int(segments),
                        stage_ids=stage_ids,
-                       num_stages=_pipeline_num_stages(n_rounds, segments))
+                       num_stages=_pipeline_num_stages(n_rounds, segments),
+                       wave_bin_ratio=float(wave_bin_ratio))
 
 
 # --------------------------------------------------------------------------
@@ -271,32 +318,54 @@ def plan_gatherv(sizes, root: int, tree: GatherTree | None = None,
 # --------------------------------------------------------------------------
 
 def _slab_ops():
-    """(extract, merge) pair: Pallas kernels on TPU, the jnp oracles from
-    ``repro.kernels.ragged_gather.ref`` elsewhere — one definition of the
-    slab semantics per backend (see ``use_pallas_dataplane``)."""
+    """(extract, merge, step) triple: Pallas kernels on TPU, the jnp
+    oracles from ``repro.kernels.ragged_gather.ref`` elsewhere — one
+    definition of the slab semantics per backend (see
+    ``use_pallas_dataplane``).  ``step`` is the FUSED merge-then-extract
+    kernel the executors run between consecutive ppermutes."""
     if _pallas_slabs_enabled():
-        from repro.kernels.ragged_gather.ops import slab_extract, slab_merge
-        return slab_extract, slab_merge
+        from repro.kernels.ragged_gather.ops import (slab_extract,
+                                                     slab_merge, slab_step)
+        return slab_extract, slab_merge, slab_step
     from repro.kernels.ragged_gather.ref import (slab_extract_ref,
-                                                 slab_merge_ref)
-    return slab_extract_ref, slab_merge_ref
+                                                 slab_merge_ref,
+                                                 slab_step_ref)
+    return slab_extract_ref, slab_merge_ref, slab_step_ref
 
 
 def _apply_steps(buf: jax.Array, steps, r, axis_name: str) -> jax.Array:
     """Run ppermute step tables over a flat row buffer (shared by the
-    gatherv and composed executors).  Each step: extract the ``payload``-row
-    slab at the device's send offset, permute ONLY that slab (never the
-    whole capacity buffer), merge the valid prefix at the device's receive
-    offset (same flat offset: zero-copy invariant).  Slab extract/merge go
-    through the pluggable backend (Pallas kernels on TPU)."""
-    extract, merge = _slab_ops()
-    for perm, payload, send_start, recv_start, recv_valid in steps:
-        s0 = jnp.asarray(send_start)[r]
-        out = extract(buf, s0, payload)
+    gatherv, scatterv, and composed executors).  Each step: extract the
+    ``payload``-row slab at the device's send offset, permute ONLY that
+    slab (never the whole capacity buffer), merge the valid prefix at the
+    device's receive offset (same flat offset: zero-copy invariant).
+
+    Between consecutive ppermutes, the step-``k`` merge and the
+    step-``k+1`` extract are FUSED into one kernel invocation (the
+    ``step`` backend op): one pass allocates the new buffer, folds the
+    received slab in, and reads the next outgoing slab from the merged
+    state — the extract MUST see the merge result, because a forwarded
+    slab may contain rows that just arrived.  That turns the
+    3-local-passes-per-step pipeline (extract / permute / merge) into a
+    leading extract, one fused local op per ppermute, and a trailing
+    merge.  Slab ops go through the pluggable backend (Pallas on TPU).
+    """
+    if not steps:
+        return buf
+    extract, merge, step = _slab_ops()
+    _, payload0, send0, _, _ = steps[0]
+    out = extract(buf, jnp.asarray(send0)[r], payload0)
+    for k, (perm, payload, send_start, recv_start, recv_valid) in \
+            enumerate(steps):
         got = jax.lax.ppermute(out, axis_name, perm)
         r0 = jnp.asarray(recv_start)[r]
         nv = jnp.asarray(recv_valid)[r]
-        buf = merge(buf, got, r0, nv)
+        if k + 1 < len(steps):
+            _, npayload, nsend, _, _ = steps[k + 1]
+            buf, out = step(buf, got, r0, nv, jnp.asarray(nsend)[r],
+                            npayload)
+        else:
+            buf = merge(buf, got, r0, nv)
     return buf
 
 
@@ -315,6 +384,29 @@ def gatherv_shard(x_local: jax.Array, plan: GathervPlan, axis_name: str) -> jax.
     return _apply_steps(buf, plan.steps, r, axis_name)
 
 
+def _reversed_step_tables(plan: "GathervPlan") -> tuple[tuple, ...]:
+    """Scatter step tables: the gather steps reversed with transposed
+    permutations.  Reversed edge parent -> child, same global row range:
+    in the gather step the child sent rows [send_start[child], +size); in
+    scatter the parent sends those rows back down.  Host-side table
+    transposition (trace time, cheap); the result has the exact step-table
+    format ``_apply_steps`` consumes, so the fused-kernel executor covers
+    scatter too."""
+    out = []
+    for perm, payload, send_start, recv_start, recv_valid in \
+            reversed(plan.steps):
+        rperm = tuple((dst, src) for (src, dst) in perm)
+        p_send = np.zeros(plan.p, np.int32)   # parent's read offset
+        c_recv = np.zeros(plan.p, np.int32)   # child's write offset
+        c_valid = np.zeros(plan.p, np.int32)  # child's valid rows
+        for (src, dst) in perm:
+            p_send[dst] = send_start[src]
+            c_recv[src] = send_start[src]
+            c_valid[src] = recv_valid[dst]
+        out.append((rperm, payload, p_send, c_recv, c_valid))
+    return tuple(out)
+
+
 def scatterv_shard(buf_root: jax.Array, plan: GathervPlan, axis_name: str) -> jax.Array:
     """Per-shard scatterv body (reverse schedule).
 
@@ -324,27 +416,7 @@ def scatterv_shard(buf_root: jax.Array, plan: GathervPlan, axis_name: str) -> ja
     r = jax.lax.axis_index(axis_name)
     F = buf_root.shape[1]
     offs = jnp.asarray(plan.offsets, jnp.int32)
-    extract, merge = _slab_ops()
-    buf = buf_root
-    for perm, payload, send_start, recv_start, recv_valid in reversed(plan.steps):
-        # reversed edge parent -> child, same global row range: in the gather
-        # step the child sent rows [send_start[child], +size); in scatter the
-        # parent sends those rows back down.  Host-side table transposition
-        # (trace time, cheap):
-        rperm = tuple((dst, src) for (src, dst) in perm)
-        p_send = np.zeros(plan.p, np.int32)   # parent's read offset
-        c_recv = np.zeros(plan.p, np.int32)   # child's write offset
-        c_valid = np.zeros(plan.p, np.int32)  # child's valid rows
-        for (src, dst) in perm:
-            p_send[dst] = send_start[src]
-            c_recv[src] = send_start[src]
-            c_valid[src] = recv_valid[dst]
-        s0 = jnp.asarray(p_send)[r]
-        out = extract(buf, s0, payload)
-        got = jax.lax.ppermute(out, axis_name, rperm)
-        r0 = jnp.asarray(c_recv)[r]
-        nv = jnp.asarray(c_valid)[r]
-        buf = merge(buf, got, r0, nv)
+    buf = _apply_steps(buf_root, _reversed_step_tables(plan), r, axis_name)
     own = jax.lax.dynamic_slice(buf, (offs[r], jnp.int32(0)),
                                 (plan.cap, F))
     return own
@@ -355,13 +427,14 @@ def scatterv_shard(buf_root: jax.Array, plan: GathervPlan, axis_name: str) -> ja
 # --------------------------------------------------------------------------
 
 def run_gatherv(mesh: Mesh, axis_name: str, blocks: list[np.ndarray],
-                root: int, bucket_rounds: int = 1, segments: int = 1):
+                root: int, bucket_rounds: int = 1, segments: int = 1,
+                wave_bin_ratio: float = 0.0):
     """Host-facing helper: gather ragged ``blocks`` (list of (n_i, F)) to the
     root over ``mesh[axis_name]``.  Returns (result (total, F), plan)."""
     sizes = [int(b.shape[0]) for b in blocks]
     F = blocks[0].shape[1]
     plan = plan_gatherv(sizes, root, bucket_rounds=bucket_rounds,
-                        segments=segments)
+                        segments=segments, wave_bin_ratio=wave_bin_ratio)
     x = np.zeros((plan.p, plan.cap, F), blocks[0].dtype)
     for i, b in enumerate(blocks):
         x[i, : sizes[i]] = b
@@ -436,6 +509,7 @@ class ComposedPlan:
     segments: int = 1               # pipeline segment count S (1 = monolithic)
     stage_ids: tuple[int, ...] = ()   # pipeline stage of each step
     num_stages: int = 0             # rounds + S - 1 stages
+    wave_bin_ratio: float = 0.0     # payload-bin ratio (0 = fixed-count)
 
     @property
     def padding_overhead(self) -> float:
@@ -480,6 +554,7 @@ class ComposedPlan:
 
 def plan_allgatherv(sizes, root: int | None = None,
                     bucket_rounds: int = 1, segments: int = 1,
+                    wave_bin_ratio: float = 0.0, validate: bool = True,
                     schedule: ComposedSchedule | None = None) -> ComposedPlan:
     """Lower an allgatherv schedule (gather + broadcast) to ppermute steps.
 
@@ -489,9 +564,20 @@ def plan_allgatherv(sizes, root: int | None = None,
     composed schedule — gather and broadcast phases stream the same global
     row chunks, so broadcast stage ``j`` starts as soon as chunk ``j`` is
     complete at the root instead of waiting for the full gather.
+    ``wave_bin_ratio > 1`` packs each wave into geometric payload bins
+    (bounded within-step padding).  ``validate=False`` skips the
+    O(steps·p) structural check — the PlanCache hot path disables it
+    because every schedule shape it lowers is already covered by the
+    validating tests; direct callers keep it on.
+
+    Pipelined plans default to the CHAIN broadcast (every port sends the
+    buffer once, so chunking genuinely collapses the broadcast β term);
+    monolithic plans keep the reversed-tree broadcast (fewest startups).
+    Pass ``schedule`` explicitly to override.
     """
     if schedule is None:
-        schedule = allgatherv_schedule(sizes, root=root)
+        schedule = allgatherv_schedule(
+            sizes, root=root, broadcast="chain" if segments > 1 else "tree")
     assert schedule.kind == "allgatherv"
     # a prebuilt schedule must describe THIS problem, not a stale one
     assert (schedule.sizes[0] == np.asarray([int(s) for s in sizes])).all(), \
@@ -507,7 +593,7 @@ def plan_allgatherv(sizes, root: int | None = None,
               for rnd in schedule.rounds]
     rounds = pipeline_rounds(rounds, segments, total)
     steps, exact, padded, max_payload, stage_ids = _bucketed_steps(
-        rounds, p, bucket_rounds)
+        rounds, p, bucket_rounds, wave_bin_ratio)
     buf_rows = total + max(cap, max_payload)
     plan = ComposedPlan(
         "allgatherv", p, schedule.root, total, cap, buf_rows,
@@ -515,21 +601,36 @@ def plan_allgatherv(sizes, root: int | None = None,
         steps=steps, extract=(), chunk=1, num_rounds=schedule.num_rounds,
         tree_bytes_exact=exact, tree_bytes_padded=padded,
         segments=int(segments), stage_ids=stage_ids,
-        num_stages=_pipeline_num_stages(schedule.num_rounds, segments))
-    plan.validate()
+        num_stages=_pipeline_num_stages(schedule.num_rounds, segments),
+        wave_bin_ratio=float(wave_bin_ratio))
+    if validate:
+        plan.validate()
     return plan
 
 
 def plan_alltoallv(size_matrix, bucket_rounds: int = 1, segments: int = 1,
+                   wave_bin_ratio: float = 0.0, validate: bool = True,
                    schedule: ComposedSchedule | None = None) -> ComposedPlan:
-    """Lower an alltoallv schedule (p packed scatter trees) to ppermute
-    steps plus per-tree extraction tables.
+    """Lower an alltoallv schedule (p packed scatter trees, or the direct
+    pairwise rounds of ``alltoallv_direct_schedule``) to ppermute steps
+    plus per-tree extraction tables.
 
     Device ``i`` supplies its packed row (blocks destined to ranks
     0..p-1, concatenated); it receives blocks from all sources, each at
     its consecutive-rank-range output offset ``sum_{i'<i} S[i'][j]``.
-    ``segments > 1`` pipelines the packed global rounds over global
-    chunks of the flat (concatenated per-tree) row space.
+
+    ``segments > 1`` pipelines the schedule PER TREE
+    (``repro.core.pipeline.pipeline_rounds_per_tree``): every source
+    tree's own row span is cut into ``segments`` chunks, so every
+    transfer genuinely shrinks to ``~1/segments`` slabs and same-stage
+    pieces of different trees fuse into shared ppermute waves (one α per
+    wave).  Global chunking of the concatenated row space — what
+    ``plan_gatherv``/``plan_allgatherv`` do, and what this op did before
+    — leaves whole trees inside single chunks, delaying them without
+    splitting anything.  ``wave_bin_ratio > 1`` packs each wave into
+    geometric payload bins (bounded within-step padding on skewed MoE
+    matrices).  ``validate=False`` skips the O(steps·p) structural check
+    (PlanCache hot path).
     """
     if schedule is None:
         schedule = alltoallv_schedule(size_matrix)
@@ -546,9 +647,14 @@ def plan_alltoallv(size_matrix, bucket_rounds: int = 1, segments: int = 1,
     chunk = max(1, int(S.max(initial=0)))
     rounds = [[(t.src, t.dst, t.size, t.start) for t in rnd]
               for rnd in schedule.rounds]
-    rounds = pipeline_rounds(rounds, segments, total)
+    # per-tree segmentation: each source tree's own row span is chunked
+    # independently (zero-row trees contribute no transfers and no spans)
+    tree_spans = [(int(schedule.row_starts[r]),
+                   int(schedule.row_starts[r]) + int(row_totals[r]))
+                  for r in range(p) if row_totals[r] > 0]
+    rounds = pipeline_rounds_per_tree(rounds, segments, tree_spans)
     steps, exact, padded, max_payload, stage_ids = _bucketed_steps(
-        rounds, p, bucket_rounds)
+        rounds, p, bucket_rounds, wave_bin_ratio)
     buf_rows = total + max(cap, max_payload, chunk)
     out_valid = tuple(int(c) for c in col_totals)
     out_rows = max(1, int(col_totals.max(initial=0))) + chunk
@@ -572,8 +678,10 @@ def plan_alltoallv(size_matrix, bucket_rounds: int = 1, segments: int = 1,
         extract=tuple(extract), chunk=chunk, num_rounds=schedule.num_rounds,
         tree_bytes_exact=exact, tree_bytes_padded=padded,
         segments=int(segments), stage_ids=stage_ids,
-        num_stages=_pipeline_num_stages(schedule.num_rounds, segments))
-    plan.validate()
+        num_stages=_pipeline_num_stages(schedule.num_rounds, segments),
+        wave_bin_ratio=float(wave_bin_ratio))
+    if validate:
+        plan.validate()
     return plan
 
 
@@ -617,7 +725,7 @@ def alltoallv_shard(x_local: jax.Array, plan: ComposedPlan,
 
 def run_allgatherv(mesh: Mesh, axis_name: str, blocks: list[np.ndarray],
                    root: int | None = None, bucket_rounds: int = 1,
-                   segments: int = 1):
+                   segments: int = 1, wave_bin_ratio: float = 0.0):
     """Host-facing helper: allgatherv ragged ``blocks`` over the mesh.
     Returns ((p, total, F) array — every device's rank-ordered copy —
     and the plan)."""
@@ -627,7 +735,7 @@ def run_allgatherv(mesh: Mesh, axis_name: str, blocks: list[np.ndarray],
         raise ValueError(f"{len(blocks)} blocks for a "
                          f"{mesh.devices.size}-device mesh")
     plan = plan_allgatherv(sizes, root=root, bucket_rounds=bucket_rounds,
-                           segments=segments)
+                           segments=segments, wave_bin_ratio=wave_bin_ratio)
     x = np.zeros((plan.p, plan.cap, F), blocks[0].dtype)
     for i, b in enumerate(blocks):
         x[i, : sizes[i]] = b
@@ -647,7 +755,8 @@ def run_allgatherv(mesh: Mesh, axis_name: str, blocks: list[np.ndarray],
 
 def run_alltoallv(mesh: Mesh, axis_name: str,
                   blocks: list[list[np.ndarray]], bucket_rounds: int = 1,
-                  segments: int = 1):
+                  segments: int = 1, wave_bin_ratio: float = 0.0,
+                  schedule: ComposedSchedule | None = None):
     """Host-facing helper: ``blocks[i][j]`` is the (S[i][j], F) block rank
     ``i`` sends to rank ``j``.  Returns (list of per-device received
     buffers — device j's is ``concat_i blocks[i][j]`` — and the plan)."""
@@ -659,7 +768,8 @@ def run_alltoallv(mesh: Mesh, axis_name: str,
     F = blocks[0][0].shape[1]
     dtype = blocks[0][0].dtype
     plan = plan_alltoallv(S, bucket_rounds=bucket_rounds,
-                          segments=segments)
+                          segments=segments, wave_bin_ratio=wave_bin_ratio,
+                          schedule=schedule)
     x = np.zeros((p, plan.cap, F), dtype)
     for i, row in enumerate(blocks):
         off = 0

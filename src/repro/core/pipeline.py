@@ -33,14 +33,34 @@ into ``S`` equal parts — does NOT have these properties: a child's range
 can sit entirely inside the parent's last segment, so "segment j forwards
 segment j" breaks and same-stage ppermutes can carry stale rows.
 
-``pipeline_rounds`` is the whole transform; the lowering in
-``repro.core.jax_collectives`` runs it right before ``_bucketed_steps``,
-so legalization, bucketing, and both SPMD executors are reused verbatim.
-``execute_steps_numpy`` is the pure-NumPy oracle of the step tables used
-by the differential tests (pipelined == monolithic at any ``p`` without
-devices).
+**Composed alltoallv segments PER TREE, not globally.**  An alltoallv
+schedule concatenates ``p`` independent scatter trees' row spaces into
+the flat space, so a global ``S``-chunking with ``S < p`` leaves most
+trees entirely inside ONE chunk: their transfers are never actually
+split, each tree is merely delayed by its chunk index, and the pipeline
+pays ``S - 1`` extra stages of startups for no payload reduction — this
+is why the flat transform rarely made ``S > 1`` win for alltoallv.
+``pipeline_rounds_per_tree`` instead cuts EACH tree's own row span into
+``S`` chunks and schedules the piece of a round-``k`` transfer falling
+in its tree's chunk ``j`` at stage ``k + j``.  Correctness needs no new
+argument: different trees carry disjoint rows (no cross-tree
+dependencies at all), and within one tree this IS the global-chunk
+transform applied to that tree's row space.  The payoff is cross-tree
+stage fusion: at stage ``t``, chunk-``j`` pieces of EVERY tree travel
+together and ``_bucketed_steps`` packs them into shared ppermute waves,
+so a stage still pays one α per wave while every piece shrank to
+``~1/S`` of its transfer.
+
+``pipeline_rounds`` / ``pipeline_rounds_per_tree`` are the whole
+transform; the lowering in ``repro.core.jax_collectives`` runs it right
+before ``_bucketed_steps``, so legalization, bucketing, and both SPMD
+executors are reused verbatim.  ``execute_steps_numpy`` is the
+pure-NumPy oracle of the step tables used by the differential tests
+(pipelined == monolithic at any ``p`` without devices).
 """
 from __future__ import annotations
+
+import bisect
 
 import numpy as np
 
@@ -96,6 +116,50 @@ def pipeline_rounds(rounds: list[list[Transfer4]], segments: int,
     return stages
 
 
+def pipeline_rounds_per_tree(rounds: list[list[Transfer4]], segments: int,
+                             tree_spans: list[tuple[int, int]]
+                             ) -> list[list[Transfer4]]:
+    """Re-time ``rounds`` with PER-TREE segmentation (composed alltoallv).
+
+    ``tree_spans`` is a sorted, disjoint list of ``(lo, hi)`` flat row
+    spans, one per tree; every transfer's range must lie inside exactly
+    one span (composed transfers carry one tree's consecutive block
+    range, so this holds by construction).  Each span is cut into
+    ``segments`` chunks independently and the piece of a round-``k``
+    transfer in its tree's chunk ``j`` is emitted at stage ``k + j`` —
+    see the module docstring for why this is dependency-safe and why it
+    beats global chunking when the flat space is a concatenation of many
+    per-tree spaces.  Stage count is ``len(rounds) + segments - 1``, same
+    as the global transform.
+    """
+    rounds = [list(r) for r in rounds]
+    if segments <= 1 or not rounds:
+        return rounds
+    spans = sorted((int(lo), int(hi)) for lo, hi in tree_spans)
+    starts = [lo for lo, _ in spans]
+    bounds_per_span = [
+        [(lo + a, lo + b) for a, b in segment_bounds(hi - lo, segments)]
+        for lo, hi in spans
+    ]
+    stages: list[list[Transfer4]] = [
+        [] for _ in range(len(rounds) + segments - 1)]
+    for k, rnd in enumerate(rounds):
+        for src, dst, size, start in rnd:
+            a, b = int(start), int(start) + int(size)
+            i = bisect.bisect_right(starts, a) - 1
+            lo, hi = spans[i]
+            if not (lo <= a and b <= hi):
+                raise ValueError(
+                    f"transfer [{a}, {b}) crosses tree span boundaries "
+                    f"(span [{lo}, {hi})): per-tree segmentation needs "
+                    "span-contained transfers")
+            for j, (clo, chi) in enumerate(bounds_per_span[i]):
+                plo, phi = max(a, clo), min(b, chi)
+                if phi > plo:
+                    stages[k + j].append((src, dst, phi - plo, plo))
+    return stages
+
+
 def num_stages(n_rounds: int, segments: int) -> int:
     """Stage count of the pipelined schedule: ``R + S - 1`` (0 if empty)."""
     if n_rounds <= 0:
@@ -126,6 +190,38 @@ def execute_steps_numpy(steps, bufs: np.ndarray) -> np.ndarray:
             nv = int(recv_valid[d])
             bufs[d, r0: r0 + nv] = snap[s, s0: s0 + nv]
     return bufs
+
+
+def execute_alltoallv_plan_numpy(plan, blocks) -> list[np.ndarray]:
+    """Run a lowered alltoallv plan end-to-end in NumPy.
+
+    ``blocks[i][j]``: the (S[i][j], F) array rank ``i`` sends to rank
+    ``j``.  Packs each device's input row at ``plan.in_starts``, runs the
+    step tables through :func:`execute_steps_numpy`, and unpacks with the
+    plan's per-tree extract tables.  Returns device ``j``'s received rows
+    — ``concat_i blocks[i][j]`` — one (out_valid[j], F) array per device.
+    The single host-side oracle of the full alltoallv dataplane, shared
+    by the differential tests and ``benchmarks/moe_e2e.py``'s numeric
+    leg.
+    """
+    p = plan.p
+    F = blocks[0][0].shape[1]
+    dtype = np.result_type(*(b.dtype for row in blocks for b in row))
+    bufs = np.zeros((p, plan.buf_rows, F), dtype)
+    for i in range(p):
+        off = plan.in_starts[i]
+        for j in range(p):
+            bufs[i, off: off + len(blocks[i][j])] = blocks[i][j]
+            off += len(blocks[i][j])
+    fin = execute_steps_numpy(plan.steps, bufs)
+    out = np.zeros((p, plan.out_rows, F), dtype)
+    for src_start, dst_start, valid in plan.extract:
+        for i in range(p):
+            nv = int(valid[i])
+            if nv:
+                out[i, dst_start[i]: dst_start[i] + nv] = \
+                    fin[i, src_start[i]: src_start[i] + nv]
+    return [out[j, : plan.out_valid[j]] for j in range(p)]
 
 
 def execute_scatter_steps_numpy(plan, bufs: np.ndarray) -> np.ndarray:

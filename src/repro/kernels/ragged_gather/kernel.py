@@ -18,6 +18,15 @@
   mask-merge a received slab back at its receive offset.  The offsets
   arrive as scalar-prefetch arguments, so inside ``shard_map`` each
   device runs the same program with its own table-looked-up starts.
+* ``slab_step_kernel`` — the FUSED step of the executor loop: one
+  invocation copies the buffer, mask-merges the slab received by the
+  previous ppermute at the receive offset, and reads the NEXT outgoing
+  slab from the merged result (the extract must observe the merge — a
+  forwarded range can contain rows that just arrived; the sequential
+  single-step grid makes the in-kernel read-after-write well defined).
+  This replaces the separate merge + extract passes between consecutive
+  ppermutes — one kernel launch and one full-buffer traversal per step
+  instead of two.
 """
 from __future__ import annotations
 
@@ -140,6 +149,49 @@ def _slab_merge_kernel(start_ref, valid_ref, buf_ref, slab_ref, o_ref, *,
     cur = o_ref[pl.ds(s0, rows), :]
     mask = (jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0) < nv)
     o_ref[pl.ds(s0, rows), :] = jnp.where(mask, slab_ref[...], cur)
+
+
+def _slab_step_kernel(recv_ref, valid_ref, send_ref, buf_ref, slab_ref,
+                      o_buf_ref, o_slab_ref, *, rows_in: int, rows_out: int):
+    o_buf_ref[...] = buf_ref[...]
+    r0 = recv_ref[0]
+    nv = valid_ref[0]
+    cur = o_buf_ref[pl.ds(r0, rows_in), :]
+    mask = (jax.lax.broadcasted_iota(jnp.int32, (rows_in, 1), 0) < nv)
+    o_buf_ref[pl.ds(r0, rows_in), :] = jnp.where(mask, slab_ref[...], cur)
+    # extract AFTER the merge landed: the outgoing slab may overlap the
+    # range that was just received (tree forwarding)
+    s0 = send_ref[0]
+    o_slab_ref[...] = o_buf_ref[pl.ds(s0, rows_out), :]
+
+
+def slab_step_kernel(buf: jax.Array, slab: jax.Array, recv_start: jax.Array,
+                     recv_valid: jax.Array, send_start: jax.Array,
+                     rows_out: int, *,
+                     interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Fused merge-then-extract: merge the ``recv_valid``-row prefix of
+    ``slab`` into ``buf`` at dynamic row ``recv_start``, and return
+    ``(merged_buf, next_slab)`` where ``next_slab`` is the contiguous
+    ``rows_out``-row slab of the MERGED buffer at dynamic row
+    ``send_start``.  All three scalars are (1,) int32 arrays (traced
+    per-device values looked up from the step tables)."""
+    rows_in, f = slab.shape
+    return pl.pallas_call(
+        functools.partial(_slab_step_kernel, rows_in=rows_in,
+                          rows_out=rows_out),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,           # recv, valid, send live in SMEM
+            grid=(1,),
+            in_specs=[pl.BlockSpec(buf.shape, lambda t, r, v, s: (0, 0)),
+                      pl.BlockSpec((rows_in, f), lambda t, r, v, s: (0, 0))],
+            out_specs=[pl.BlockSpec(buf.shape, lambda t, r, v, s: (0, 0)),
+                       pl.BlockSpec((rows_out, f),
+                                    lambda t, r, v, s: (0, 0))],
+        ),
+        out_shape=(jax.ShapeDtypeStruct(buf.shape, buf.dtype),
+                   jax.ShapeDtypeStruct((rows_out, f), buf.dtype)),
+        interpret=interpret,
+    )(recv_start, recv_valid, send_start, buf, slab)
 
 
 def slab_merge_kernel(buf: jax.Array, slab: jax.Array, start: jax.Array,

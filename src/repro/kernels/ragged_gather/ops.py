@@ -9,7 +9,8 @@ import jax
 import jax.numpy as jnp
 
 from .kernel import (ragged_gather_kernel, ragged_scatter_kernel,
-                     slab_extract_kernel, slab_merge_kernel)
+                     slab_extract_kernel, slab_merge_kernel,
+                     slab_step_kernel)
 from .ref import build_pack_index
 
 
@@ -97,3 +98,21 @@ def slab_merge(buf, slab, start, valid, *, interpret: bool | None = None):
     s = jnp.asarray(start, jnp.int32).reshape(1)
     v = jnp.asarray(valid, jnp.int32).reshape(1)
     return slab_merge_kernel(buf, slab, s, v, interpret=interpret)
+
+
+def slab_step(buf, got, recv_start, recv_valid, send_start, rows_out: int, *,
+              interpret: bool | None = None):
+    """Fused dataplane step via one Pallas invocation: merge the received
+    slab ``got`` at traced row ``recv_start`` (``recv_valid`` live rows),
+    then extract the next ``rows_out``-row outgoing slab of the MERGED
+    buffer at traced row ``send_start``.  Returns ``(buf, next_slab)``.
+    Matches ``ref.slab_step_ref`` row-identically (differentially
+    tested).  NOT jit-wrapped: called inside traced ``shard_map`` bodies.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    r = jnp.asarray(recv_start, jnp.int32).reshape(1)
+    v = jnp.asarray(recv_valid, jnp.int32).reshape(1)
+    s = jnp.asarray(send_start, jnp.int32).reshape(1)
+    return slab_step_kernel(buf, got, r, v, s, rows_out,
+                            interpret=interpret)

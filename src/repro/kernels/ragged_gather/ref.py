@@ -46,6 +46,18 @@ def slab_merge_ref(buf: jnp.ndarray, slab: jnp.ndarray, start,
                                         (start, jnp.int32(0)))
 
 
+def slab_step_ref(buf: jnp.ndarray, got: jnp.ndarray, recv_start,
+                  recv_valid, send_start,
+                  rows_out: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused dataplane step: merge the received slab, then extract the
+    next outgoing slab FROM THE MERGED buffer (a forwarded slab may
+    contain rows that just arrived).  Semantically exactly
+    ``slab_merge_ref`` followed by ``slab_extract_ref`` — the Pallas
+    ``slab_step_kernel`` must match this oracle row-identically."""
+    buf = slab_merge_ref(buf, got, recv_start, recv_valid)
+    return buf, slab_extract_ref(buf, send_start, rows_out)
+
+
 def pack_blocks_ref(blocks: jnp.ndarray, sizes: jnp.ndarray,
                     total_pad: int) -> jnp.ndarray:
     """Pack padded (N, cap, F) blocks into a contiguous (total_pad, F)

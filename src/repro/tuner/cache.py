@@ -28,7 +28,8 @@ import pickle
 from collections import OrderedDict
 from dataclasses import dataclass
 
-CACHE_VERSION = 2  # v2: plans carry pipeline fields (segments/stage_ids)
+CACHE_VERSION = 3  # v3: per-tree alltoallv pipelining, payload-binned
+                   # waves (wave_bin_ratio), direct pairwise candidates
 PICKLE_PROTOCOL = 4  # fixed: byte-identical round-trips across sessions
 
 _UNLOADED = object()  # sentinel: entry known from the index, not yet read

@@ -32,7 +32,9 @@ import numpy as np
 
 from repro.core import baselines
 from repro.core import extensions as ext
-from repro.core.composed import allgatherv_schedule, alltoallv_schedule
+from repro.core.composed import (allgatherv_schedule,
+                                 alltoallv_direct_schedule,
+                                 alltoallv_schedule)
 from repro.core.costmodel import CostParams, simulate_gather, simulate_scatter
 from repro.core.treegather import (GatherTree, build_gather_tree,
                                    construction_alpha_rounds)
@@ -52,6 +54,7 @@ class Candidate:
     bytes_exact: int = 0
     bucket_rounds: int = 1
     segments: int = 1                     # pipeline segment count S
+    wave_bin_ratio: float = 0.0           # payload-bin ratio (0 = off)
 
     def cost(self, params: CostParams) -> float:
         params.validate()
@@ -96,13 +99,19 @@ def plan_pipeline_cost(plan, params: CostParams,
     row chunks with no intra-stage dependencies (``repro.core.pipeline``),
     so their transfers overlap on the fabric: a stage pays one startup per
     ppermute it issues (waves/buckets still serialize their launches) but
-    its bandwidth term is the LARGEST step payload, with the remaining
-    concurrent padded traffic amortized over the ``p`` per-device links at
-    ``congestion`` strength — the same shared-fabric term as
-    ``plan_step_cost``.  On a one-step stage this reduces exactly to
-    ``plan_step_cost``'s per-step charge, so monolithic single-wave plans
-    cost identically under both views; the views only diverge where the
-    pipeline actually overlaps rounds.
+    its bandwidth term is the stage's PORT-CRITICAL padded load — the
+    largest per-device send or receive volume across the stage's steps —
+    with the remaining concurrent padded traffic amortized over the ``p``
+    per-device links at ``congestion`` strength, the same shared-fabric
+    term as ``plan_step_cost``.  The port term is what keeps the model
+    honest under the 1-ported telephone machine: two same-stage waves
+    into the SAME receiver serialize on its port (a hot MoE expert's
+    ingress is schedule-independent), while waves touching disjoint
+    endpoints genuinely overlap — which is exactly where per-tree
+    pipelining wins.  On a one-step stage every endpoint touches at most
+    one send and one receive, so the port term equals the step payload
+    and the charge reduces exactly to ``plan_step_cost``'s; monolithic
+    single-wave plans cost identically under both views.
     """
     params.validate()
     stage_ids = plan.stage_ids or tuple(range(len(plan.steps)))
@@ -112,11 +121,19 @@ def plan_pipeline_cost(plan, params: CostParams,
     total = 0.0
     for sid in sorted(stages):
         steps = stages[sid]
-        payloads = [payload * len(perm) for perm, payload, *_ in steps]
-        biggest = max(payload for _, payload, *_ in steps)
-        spill = (sum(payloads) - biggest) / plan.p
+        sent: dict[int, int] = {}
+        recv: dict[int, int] = {}
+        padded = 0
+        for perm, payload, *_ in steps:
+            padded += payload * len(perm)
+            for s, d in perm:
+                sent[s] = sent.get(s, 0) + payload
+                recv[d] = recv.get(d, 0) + payload
+        port = max(max(sent.values(), default=0),
+                   max(recv.values(), default=0))
+        spill = (padded - port) / plan.p
         total += (params.alpha * len(steps)
-                  + params.beta * (biggest + congestion * spill))
+                  + params.beta * (port + congestion * spill))
     return total
 
 
@@ -241,48 +258,97 @@ def rooted_dataplane_candidates(op: str, m, root: int,
 
 def composed_dataplane_candidates(op: str, arg, root: int | None = None,
                                   buckets=(1, 2, 4),
-                                  segments=(1,)) -> list[Candidate]:
+                                  segments=(1,),
+                                  wave_bins=()) -> list[Candidate]:
     """``bucket_rounds`` variants of the composed TUW schedules, costed on
     their lowered plans.  Bucketing trades startups (more ppermutes) for
     padding (smaller payloads) — a pure α-β tradeoff the selector decides
-    per regime.  The schedule is built once and shared across variants.
+    per regime.  The schedule is built once and shared across variants;
+    lowering runs with ``validate=False`` (the enumerate path IS the
+    PlanCache hot path, and every schedule shape here is covered by the
+    validating tests).
 
     ``segments`` adds pipelined variants (``tuw_composed(b=1,S=s)``)
     lowered through ``repro.core.pipeline`` and costed stage-synchronously
     (:func:`plan_pipeline_cost`) — for allgatherv these collapse the
-    broadcast phase's repeated full-buffer β term, which is where
-    pipelining pays the most.
+    broadcast phase's repeated full-buffer β term; for alltoallv the
+    re-timing is PER TREE, so stage payloads genuinely shrink and
+    same-stage slabs of different trees fuse into shared waves.
+
+    ``wave_bins`` (e.g. ``(2.0,)``) adds payload-binned variants
+    (``...,g2``): waves packed into geometric size bins, bounding
+    within-step padding on skewed matrices — the MoE dispatch shape.
+
+    alltoallv additionally enumerates the DIRECT pairwise schedule
+    (``direct`` / ``direct(g2)`` / ``direct(S=s,g2)``): exact bytes, no
+    tree forwarding, ``p - 1`` startups — the large-message regular
+    all-to-all the packed trees must beat to be selected.
     """
     from repro.core.jax_collectives import plan_allgatherv, plan_alltoallv
 
     if op == "allgatherv":
+        # monolithic variants broadcast down the reversed tree (fewest
+        # startups); pipelined variants broadcast along the chain (every
+        # port sends the buffer once, so chunking collapses the β term),
+        # built lazily — segments=(1,) enumerations never need it
         schedule = allgatherv_schedule([int(x) for x in arg], root=root)
-        lower = lambda b, s=1: plan_allgatherv(arg, root=root,
-                                               bucket_rounds=b, segments=s,
-                                               schedule=schedule)
+        chain = None
+
+        def lower(b, s=1, wb=0.0):
+            nonlocal chain
+            if s > 1 and chain is None:
+                chain = allgatherv_schedule([int(x) for x in arg],
+                                            root=root, broadcast="chain")
+            return plan_allgatherv(
+                arg, root=root, bucket_rounds=b, segments=s,
+                wave_bin_ratio=wb, validate=False,
+                schedule=(chain if s > 1 else schedule))
     elif op == "alltoallv":
         schedule = alltoallv_schedule(np.asarray(arg, np.int64))
-        lower = lambda b, s=1: plan_alltoallv(arg, bucket_rounds=b,
-                                              segments=s, schedule=schedule)
+        lower = lambda b, s=1, wb=0.0: plan_alltoallv(
+            arg, bucket_rounds=b, segments=s, wave_bin_ratio=wb,
+            validate=False, schedule=schedule)
     else:
         raise ValueError(op)
-    out = []
-    for b in buckets:
-        plan = lower(b)
+
+    def add(out, name, plan, **meta):
+        cost = (plan_pipeline_cost if plan.segments > 1 else plan_step_cost)
         out.append(Candidate(
-            f"tuw_composed(b={b})", op, True,
-            cost_fn=lambda P, pl=plan: plan_step_cost(pl, P),
+            name, op, True,
+            cost_fn=lambda P, pl=plan, c=cost: c(pl, P),
             builder=lambda pl=plan: pl,
-            bytes_exact=plan.tree_bytes_exact, bucket_rounds=b))
+            bytes_exact=plan.tree_bytes_exact, **meta))
+
+    def bin_tag(wb):
+        return f"g{wb:g}"
+
+    out: list[Candidate] = []
+    for b in buckets:
+        add(out, f"tuw_composed(b={b})", lower(b), bucket_rounds=b)
+    for wb in wave_bins:
+        add(out, f"tuw_composed(b=1,{bin_tag(wb)})", lower(1, 1, wb),
+            wave_bin_ratio=wb)
     for s in segments:
         if s <= 1:
             continue  # S=1 is exactly tuw_composed(b=1) above
-        plan = lower(1, s)
-        out.append(Candidate(
-            f"tuw_composed(b=1,S={s})", op, True,
-            cost_fn=lambda P, pl=plan: plan_pipeline_cost(pl, P),
-            builder=lambda pl=plan: pl,
-            bytes_exact=plan.tree_bytes_exact, segments=s))
+        add(out, f"tuw_composed(b=1,S={s})", lower(1, s), segments=s)
+        for wb in wave_bins:
+            add(out, f"tuw_composed(b=1,S={s},{bin_tag(wb)})",
+                lower(1, s, wb), segments=s, wave_bin_ratio=wb)
+    if op == "alltoallv":
+        direct = alltoallv_direct_schedule(np.asarray(arg, np.int64))
+        dlower = lambda s=1, wb=0.0: plan_alltoallv(
+            arg, segments=s, wave_bin_ratio=wb, validate=False,
+            schedule=direct)
+        add(out, "direct", dlower())
+        for wb in wave_bins:
+            add(out, f"direct({bin_tag(wb)})", dlower(1, wb),
+                wave_bin_ratio=wb)
+            for s in segments:
+                if s <= 1:
+                    continue
+                add(out, f"direct(S={s},{bin_tag(wb)})", dlower(s, wb),
+                    segments=s, wave_bin_ratio=wb)
     return out
 
 
@@ -290,10 +356,12 @@ def enumerate_candidates(op: str, arg, root: int | None,
                          params: CostParams, view: str = "model",
                          include_extensions: bool = False,
                          buckets=(1, 2, 4),
-                         segments=(1,)) -> list[Candidate]:
+                         segments=(1,),
+                         wave_bins=()) -> list[Candidate]:
     """All candidates for one problem.  ``arg`` is the size vector (rooted
     and allgatherv ops) or the p x p size matrix (alltoallv); ``segments``
-    adds pipelined data-plane variants (``S > 1`` entries only)."""
+    adds pipelined data-plane variants (``S > 1`` entries only) and
+    ``wave_bins`` payload-binned composed variants."""
     if op not in OPS:
         raise ValueError(f"unknown op {op!r}; expected one of {OPS}")
     if view not in ("model", "dataplane"):
@@ -308,4 +376,5 @@ def enumerate_candidates(op: str, arg, root: int | None,
     # composed ops have a single machine view: the schedule IS the
     # round-synchronous data plane (simulate_composed == bucket-1 steps)
     return composed_dataplane_candidates(op, arg, root=root, buckets=buckets,
-                                         segments=segments)
+                                         segments=segments,
+                                         wave_bins=wave_bins)

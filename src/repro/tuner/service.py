@@ -93,6 +93,7 @@ class PlannerService:
                  max_compiled: int = 64,
                  buckets=(1, 2, 4),
                  segments=(1, 2, 4, 8),
+                 wave_bins=(2.0,),
                  hysteresis: float = 0.05,
                  measure=None, top_k: int = 3,
                  calibrator: OnlineCalibrator | None = None):
@@ -109,6 +110,9 @@ class PlannerService:
             cache_dir, max_entries=max_cached_plans)
         self.buckets = tuple(buckets)
         self.segments = tuple(segments)
+        # payload-bin ratios enumerated as wave-packed composed variants
+        # (geometric bins bound within-step padding on skewed matrices)
+        self.wave_bins = tuple(wave_bins)
         self.hysteresis = float(hysteresis)
         self.measure = measure
         self.top_k = int(top_k)
@@ -160,7 +164,8 @@ class PlannerService:
                                 self.params.time_unit, "row")
         cands = enumerate_candidates(op, qarg, root, sel_params,
                                      view="dataplane", buckets=self.buckets,
-                                     segments=self.segments)
+                                     segments=self.segments,
+                                     wave_bins=self.wave_bins)
         rb = max(1, int(row_bytes))
         cal = self.calibrator
         if cal is not None:

@@ -21,8 +21,9 @@ import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
-if SRC not in sys.path:
-    sys.path.insert(0, SRC)
+for _p in (SRC, REPO):  # REPO: tests share benchmark helpers (benchmarks.common)
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 
 # --------------------------------------------------------------------------

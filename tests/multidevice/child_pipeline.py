@@ -51,6 +51,26 @@ def check_pipelined_equals_monolithic():
             np.testing.assert_array_equal(a, b)
     print("pipelined == monolithic OK (4 ops, S in {2,4}, p=8)")
 
+    # the MoE fast-path variants on a real mesh: payload-binned waves and
+    # the direct pairwise schedule, pipelined per tree — all byte-identical
+    from repro.core.composed import alltoallv_direct_schedule
+
+    S_sizes = [[int(b.shape[0]) for b in row] for row in ab]
+    tb, plan = jc.run_alltoallv(mesh, "x", ab, segments=2,
+                                wave_bin_ratio=2.0)
+    assert plan.wave_bin_ratio == 2.0
+    for a, b in zip(tb, t1):
+        np.testing.assert_array_equal(a, b)
+    td, plan = jc.run_alltoallv(mesh, "x", ab, segments=2,
+                                wave_bin_ratio=2.0,
+                                schedule=alltoallv_direct_schedule(S_sizes))
+    off_diag = sum(S_sizes[i][j] for i in range(PP) for j in range(PP)
+                   if i != j)
+    assert plan.tree_bytes_exact == off_diag  # direct: exact bytes
+    for a, b in zip(td, t1):
+        np.testing.assert_array_equal(a, b)
+    print("moe fast path OK (binned waves + direct schedule, S=2, p=8)")
+
 
 def check_pallas_slab_backend():
     """Force the Pallas slab kernels (interpret mode on CPU) through the

@@ -10,11 +10,13 @@ from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.ragged_gather.ops import (pack_blocks, ragged_gather,
                                              ragged_scatter, slab_extract,
-                                             slab_merge, unpack_blocks)
+                                             slab_merge, slab_step,
+                                             unpack_blocks)
 from repro.kernels.ragged_gather.ref import (pack_blocks_ref,
                                              ragged_gather_ref,
                                              ragged_scatter_ref,
-                                             slab_extract_ref, slab_merge_ref)
+                                             slab_extract_ref,
+                                             slab_merge_ref, slab_step_ref)
 from repro.kernels.rg_lru.ops import rglru_scan
 from repro.kernels.rg_lru.ref import rglru_scan_ref
 
@@ -145,6 +147,56 @@ def test_slab_ops_accept_traced_offsets():
     want = np.asarray(buf).copy()
     want[2:4] = -1.0
     np.testing.assert_array_equal(got, want)
+
+
+# --------------------------------------------------------- fused step kernel
+
+@given(st.integers(min_value=1, max_value=48),
+       st.integers(min_value=1, max_value=48),
+       st.integers(min_value=1, max_value=8),
+       st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=20, deadline=None)
+def test_slab_step_matches_merge_then_extract(rows_in, rows_out, f, seed):
+    """The fused kernel == slab_merge followed by slab_extract, including
+    the forwarding case where the outgoing slab overlaps the range that
+    was just merged (the extract must see the merged rows)."""
+    rng = np.random.default_rng(seed)
+    buf_rows = max(rows_in, rows_out) + int(rng.integers(0, 32))
+    buf = jnp.asarray(rng.standard_normal((buf_rows, f)), jnp.float32)
+    got_slab = jnp.asarray(rng.standard_normal((rows_in, f)), jnp.float32)
+    r0 = int(rng.integers(0, buf_rows - rows_in + 1))
+    nv = int(rng.integers(0, rows_in + 1))
+    s0 = int(rng.integers(0, buf_rows - rows_out + 1))
+    new_buf, nxt = slab_step(buf, got_slab, r0, nv, s0, rows_out,
+                             interpret=True)
+    want_buf, want_nxt = slab_step_ref(buf, got_slab, r0, nv, s0, rows_out)
+    np.testing.assert_array_equal(np.asarray(new_buf), np.asarray(want_buf))
+    np.testing.assert_array_equal(np.asarray(nxt), np.asarray(want_nxt))
+
+
+def test_slab_step_extract_sees_merged_rows():
+    """Forwarding regression pin: extract range == merge range — the
+    returned slab must be the freshly received rows, not stale buffer."""
+    buf = jnp.zeros((8, 2), jnp.float32)
+    got = jnp.asarray(np.arange(8, dtype=np.float32).reshape(4, 2))
+    new_buf, nxt = slab_step(buf, got, 2, 4, 2, 4, interpret=True)
+    np.testing.assert_array_equal(np.asarray(nxt), np.asarray(got))
+    np.testing.assert_array_equal(np.asarray(new_buf)[2:6], np.asarray(got))
+
+
+def test_slab_step_traced_offsets_under_jit():
+    buf = jnp.asarray(np.arange(20, dtype=np.float32).reshape(10, 2))
+    got = jnp.full((3, 2), -1.0, jnp.float32)
+
+    @jax.jit
+    def f(buf, r0, nv, s0):
+        return slab_step(buf, got, r0, nv, s0, 3, interpret=True)
+
+    new_buf, nxt = f(buf, jnp.int32(1), jnp.int32(2), jnp.int32(0))
+    want = np.asarray(buf).copy()
+    want[1:3] = -1.0
+    np.testing.assert_array_equal(np.asarray(new_buf), want)
+    np.testing.assert_array_equal(np.asarray(nxt), want[0:3])
 
 
 # ---------------------------------------------------------- flash attention

@@ -196,14 +196,24 @@ def test_pipeline_cost_reduces_to_step_cost_on_monolithic_plans():
 
 
 def test_pipelining_collapses_broadcast_beta_term():
-    """Theorem-1 behavior on the streamed data plane: allgatherv's
-    broadcast phase repeats the full buffer each round, so pipelined β
-    approaches one buffer's worth while monolithic pays d buffers."""
+    """Theorem-1 behavior on the streamed data plane: the monolithic
+    reversed-tree broadcast repeats the full buffer each round AND
+    serializes ``d`` sends on the root's port; the pipelined plan
+    switches to the chain broadcast, where every port sends the buffer
+    once and stage loads are one chunk.  Under the PORT-HONEST stage
+    cost (the per-device critical load — a receiver's ingress cannot be
+    overlapped away), the chain's β term is ``(p - 2 + S)/S`` buffers
+    plus the shared-fabric spill, vs the tree's ``~d`` buffers — a real
+    but bounded win (no 2x fictions from overlapping one port's sends).
+    """
     P = CostParams(1e-6, 2e-11, "s", "byte")
     m = [1_000_000] * 16
     mono = plan_pipeline_cost(plan_allgatherv(m), P)
     pipe = plan_pipeline_cost(plan_allgatherv(m, segments=8), P)
-    assert pipe < 0.6 * mono
+    assert pipe < 0.9 * mono
+    # and the win grows with S as (p - 2 + S)/S falls toward 1 buffer
+    pipe4 = plan_pipeline_cost(plan_allgatherv(m, segments=4), P)
+    assert pipe < pipe4
     # tiny messages: extra startups dominate, monolithic must win
     tiny_mono = plan_pipeline_cost(plan_allgatherv([8] * 16), P)
     tiny_pipe = plan_pipeline_cost(plan_allgatherv([8] * 16, segments=8), P)
