@@ -30,8 +30,10 @@ def gatherv_times(m, root, params=PARAMS):
                                       params)
     out["knomial3"] = simulate_gather(baselines.knomial_tree(m, root, 3),
                                       params)
+    # the Intel-MPI library flavor (linear intra + binomial leaders): the
+    # paper's Tables 7-11 baseline, NOT this repo's TUW-in-TUW two_level
     out["two_level"] = simulate_gather(
-        baselines.two_level_tree(m, root, 16), params)
+        baselines.two_level_library_tree(m, root, 16), params)
     return out
 
 

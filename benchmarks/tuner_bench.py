@@ -41,11 +41,12 @@ if __package__ in (None, ""):  # direct-script execution
 else:
     from .common import emit
 
-from repro.core.costmodel import CostParams
+from repro.core.costmodel import CostParams, HostTopology
 from repro.core.distributions import block_sizes
 from repro.core.guidelines import (evaluate, evaluate_allgatherv,
                                    evaluate_alltoallv)
-from repro.tuner import (PlannerService, SyntheticTimingBackend, calibrate,
+from repro.tuner import (PlannerService, SyntheticHierarchicalBackend,
+                         SyntheticTimingBackend, calibrate,
                          enumerate_candidates, select)
 
 QDR = CostParams.infiniband_qdr()
@@ -223,6 +224,93 @@ def plan_latency_section(rows: list) -> dict:
             "lower_unvalidated_s": lower_unvalidated_s}
 
 
+def hierarchical_section(rows: list) -> dict:
+    """Flat vs two-level win margins across DCN/ICI β ratios.
+
+    Two hierarchical problems, both selected through the dataplane view
+    under per-link (α, β):
+
+    * a decode-shaped MoE dispatch matrix on 2 hosts x 6 devices — the
+      aggregation regime (α_dcn-dominated small blocks) where the
+      two-level scatter trees beat the direct exchange;
+    * a uniform gatherv on 4 hosts x 3 devices — non-power-of-two hosts
+      make flat TUW cubes straddle host boundaries and re-cross the DCN.
+
+    For every ratio the selected plan is raced on the synthetic
+    hierarchical machine (true per-link parameters + noise) against the
+    best flat candidate; the bench ASSERTS the acceptance criterion:
+    at β_dcn/β_ici >= 8 a two-level schedule is selected for the MoE
+    signature and its measured time beats every flat plan.
+    """
+    ratios = (1, 2, 4, 8, 16)
+    alpha_ici, beta_ici = 1e-6, 2e-11
+    alpha_dcn = 50e-6
+    row_bytes = 4096
+    out = {"alpha_ici_s": alpha_ici, "alpha_dcn_s": alpha_dcn,
+           "beta_ici_s_per_byte": beta_ici, "row_bytes": row_bytes,
+           "beta_ratios": list(ratios), "problems": []}
+    rng = np.random.default_rng(19)
+    topo_moe = HostTopology(2, 6)
+    loads = rng.dirichlet(np.full(topo_moe.p, 0.3))
+    S = (np.outer(np.full(topo_moe.p, 1.0 / topo_moe.p), loads)
+         * topo_moe.p * 256).astype(np.int64)
+    topo_g = HostTopology(4, 3)
+    # decode-scale blocks: large enough that β ratios matter, small enough
+    # that the DCN startups the hierarchy aggregates are not yet drowned
+    # (at ~16k rows the flat linear tree honestly wins — one root-port β
+    # pass, no leader re-crossing — and the sweep would just report it)
+    problems = [
+        ("alltoallv", "moe_decode_dispatch", topo_moe, S, None),
+        ("gatherv", "uniform_hosts_4x3", topo_g,
+         block_sizes("same", topo_g.p, 256), 0),
+    ]
+    for op, name, topo, arg, root in problems:
+        recs = []
+        for ratio in ratios:
+            machine = SyntheticHierarchicalBackend(
+                topo, alpha_ici_s=alpha_ici, beta_ici_s_per_byte=beta_ici,
+                alpha_dcn_s=alpha_dcn,
+                beta_dcn_s_per_byte=ratio * beta_ici, noise=0.02,
+                seed=ratio)
+            sel_params = machine.true_params().scale_data(row_bytes)
+            cands = enumerate_candidates(op, arg, root, sel_params,
+                                         view="dataplane",
+                                         segments=(1, 2, 4),
+                                         wave_bins=(2.0,), topology=topo)
+            sel = select(cands, sel_params)
+            measured = {c.name: machine.measure(c, row_bytes=row_bytes)
+                        for c in cands}
+            flat_best = min((t, n) for n, t in measured.items()
+                            if not n.startswith("two_level"))
+            two_best = min((t, n) for n, t in measured.items()
+                           if n.startswith("two_level"))
+            win = flat_best[0] / two_best[0]
+            recs.append({
+                "beta_ratio": ratio, "selected": sel.chosen,
+                "selected_cost_s": sel.cost,
+                "two_level_measured_s": two_best[0],
+                "best_flat": flat_best[1],
+                "best_flat_measured_s": flat_best[0],
+                "two_level_win_vs_flat": win,
+            })
+            rows.append((
+                f"tuner_hier/{name}/beta_ratio={ratio}", sel.cost * 1e6,
+                f"algo={sel.chosen};two_level_win={win:.2f}x;"
+                f"best_flat={flat_best[1]}"))
+        out["problems"].append({"op": op, "regime": name,
+                                "hosts": topo.hosts,
+                                "devices_per_host": topo.devices_per_host,
+                                "sweep": recs})
+    # acceptance: beta ratio >= 8 selects two-level on the MoE signature
+    # and the selected plan's measured time beats the best flat plan
+    moe = out["problems"][0]["sweep"]
+    for rec in moe:
+        if rec["beta_ratio"] >= 8:
+            assert rec["selected"].startswith("two_level"), rec
+            assert rec["two_level_win_vs_flat"] > 1.0, rec
+    return out
+
+
 def run(emit_rows: bool = True, synthetic: bool = False,
         out_path: str | None = None):
     cal = None
@@ -239,11 +327,13 @@ def run(emit_rows: bool = True, synthetic: bool = False,
     composed_section(ici, rows, records)
     warm = warm_cache_section(rows)
     latency = plan_latency_section(rows)
+    hier = hierarchical_section(rows)
     non_tuw = [r["regime"] for r in records if r["op"] == "gatherv"
                and r["selected"] != "tuw"]
     payload = {
-        "version": 1,
+        "version": 2,
         "plan_latency": latency,
+        "hierarchical": hier,
         "calibration": None if cal is None else {
             "alpha_s": cal.alpha_s, "beta_s_per_byte": cal.beta_s_per_byte,
             "r2": cal.r2, "n_samples": cal.n_samples, "backend": cal.backend},

@@ -67,7 +67,9 @@ def plan_consolidation(shard_bytes: list[int], root: int = 0) -> dict:
     if not shard_bytes:
         return {}
     tree = build_gather_tree(list(shard_bytes), root=root)
-    params = CostParams(alpha=1.0, beta=1.0 / 50e3)  # ICI: us, bytes
+    # the canonical ICI calibration, converted to microseconds so the
+    # manifest's *_us keys stay honest (sizes below are in bytes)
+    params = CostParams.tpu_ici().to_us()
     from repro.core.baselines import linear_tree
     direct = simulate_gather(linear_tree(list(shard_bytes), root), params)
     tuw = simulate_gather(tree, params, include_construction=True)

@@ -14,9 +14,9 @@ from .distributed import (  # noqa: F401
     Plan, ProtocolStats, assemble_tree, build_gather_tree_distributed,
 )
 from .costmodel import (  # noqa: F401
-    CostParams, allgatherv_time, allreduce_time, alltoallv_time,
-    simulate_composed, simulate_gather, simulate_pipelined,
-    simulate_scatter,
+    CostParams, HierarchicalCostParams, HostTopology, allgatherv_time,
+    allreduce_time, alltoallv_time, edge_params_fn, simulate_composed,
+    simulate_gather, simulate_pipelined, simulate_scatter,
 )
 from .composed import (  # noqa: F401
     ComposedSchedule, Transfer, allgatherv_schedule, alltoallv_schedule,

@@ -6,7 +6,7 @@ and the same executors apply.  Sizes are attached from the block vector
 """
 from __future__ import annotations
 
-from .treegather import Edge, GatherTree, ceil_log2
+from .treegather import Edge, GatherTree, build_gather_tree, ceil_log2  # noqa: F401
 
 
 def _attach_sizes(p: int, root: int, parent: dict[int, tuple[int, int]],
@@ -93,11 +93,64 @@ def linear_tree(m: list[int], root: int) -> GatherTree:
 
 
 def two_level_tree(m: list[int], root: int, node_size: int = 16) -> GatherTree:
-    """Topology-aware two-level gather (Intel MPI 'topology aware' flavor).
+    """Topology-derived two-level gather: TUW inside each host, TUW across.
 
-    Processes are grouped in nodes of ``node_size`` consecutive ranks; each
-    node's leader (lowest rank, or the root in its own node) gathers its node
-    linearly, then leaders gather to the root over a binomial tree.
+    Hosts are the ``node_size``-rank consecutive groups of a
+    host-major layout (``HostTopology``).  Each host runs the paper's TUW
+    gather over its own block slice — the root's host gathers into the
+    root, every other host into an algorithm-chosen leader (Lemma 1, no
+    waiting penalty) — then the leaders gather to the root over a second
+    TUW tree built on the per-host data totals.  Every inter-host edge
+    carries whole-host subtrees, so each host's data crosses the DCN
+    exactly once; a flat TUW tree whose cubes straddle host boundaries
+    (``node_size`` not a power of two) re-crosses the DCN every time a
+    boundary-straddling cube merges.
+
+    The result is a plain contiguous :class:`GatherTree` (hosts are
+    consecutive rank ranges, and both phases are TUW trees preserving
+    consecutive block ranges), so the zero-copy ppermute data plane lowers
+    and executes it like any other tree, and
+    ``GatherTree.reversed_for_scatter()`` gives the two-level scatter /
+    broadcast for free.
+    """
+    p = len(m)
+    if not 0 <= root < p:
+        raise ValueError("root out of range")
+    D = max(1, int(node_size))
+    edges: list[Edge] = []
+    leaders: list[int] = []
+    totals: list[int] = []
+    intra_rounds = 0
+    for base in range(0, p, D):
+        hi = min(base + D, p)
+        local = m[base:hi]
+        lroot = root - base if base <= root < hi else None
+        t = build_gather_tree(local, root=lroot)
+        leaders.append(base + t.root)
+        totals.append(sum(local))
+        intra_rounds = max(intra_rounds, t.rounds)
+        edges += [Edge(base + e.child, base + e.parent, e.size, e.round,
+                       base + e.lo, base + e.hi) for e in t.edges]
+    # leaders gather to the root over a TUW tree on per-host totals; host
+    # index ranges map back to rank ranges because hosts are consecutive
+    lt = build_gather_tree(totals, root=root // D)
+    edges += [Edge(leaders[e.child], leaders[e.parent], e.size,
+                   intra_rounds + e.round,
+                   e.lo * D, min((e.hi + 1) * D, p) - 1) for e in lt.edges]
+    return GatherTree(p, root, edges, [], contiguous=True, name="two_level")
+
+
+def two_level_library_tree(m: list[int], root: int,
+                           node_size: int = 16) -> GatherTree:
+    """Two-level gather, Intel MPI 'topology aware' flavor (paper tables).
+
+    The library baseline the paper races against: each node's leader
+    (lowest rank, or the root in its own node) gathers its node LINEARLY,
+    then leaders gather to the root over a binomial tree — both phases
+    size-oblivious.  Kept verbatim so the Tables 7-11 reproduction keeps
+    comparing against what the library actually does;
+    :func:`two_level_tree` above is this repo's own topology-derived
+    schedule (TUW at both levels) that the tuner races.
     """
     p = len(m)
     parent: dict[int, tuple[int, int]] = {}

@@ -146,6 +146,25 @@ class ComposedSchedule:
 # schedule construction
 # --------------------------------------------------------------------------
 
+def _check_tree_fits(tree: GatherTree, m: list[int]) -> None:
+    """Cheap (O(edges)) sanity check of a caller-supplied tree: every
+    live edge must carry a contiguous block-rank range whose sizes sum to
+    the edge size under THIS ``m``.  Catches trees built for different
+    block sizes and non-contiguous trees before they produce a silently
+    corrupt schedule on the ``validate=False`` lowering hot path."""
+    pref = [0]
+    for x in m:
+        pref.append(pref[-1] + int(x))
+    for e in tree.edges:
+        if e.size == 0:
+            continue
+        if e.lo < 0 or e.size != pref[e.hi + 1] - pref[e.lo]:
+            raise ValueError(
+                f"tree {tree.name!r} does not fit these block sizes: edge "
+                f"{e.child}->{e.parent} carries {e.size} rows but blocks "
+                f"{e.lo}..{e.hi} hold {pref[e.hi + 1] - pref[e.lo]}")
+
+
 def _tree_rounds(tree: GatherTree, skip_empty: bool = True):
     """Edges grouped by round, empty transfers (and then empty rounds)
     dropped — safe because a zero-size subtree contains only zero-size
@@ -159,7 +178,8 @@ def _tree_rounds(tree: GatherTree, skip_empty: bool = True):
 
 
 def allgatherv_schedule(m, root: int | None = None,
-                        broadcast: str = "tree") -> ComposedSchedule:
+                        broadcast: str = "tree",
+                        tree: GatherTree | None = None) -> ComposedSchedule:
     """allgatherv = gatherv (free or fixed root) + broadcast of the packed
     buffer.  Every device ends with all blocks in rank order at their
     global offsets.
@@ -180,6 +200,10 @@ def allgatherv_schedule(m, root: int | None = None,
       finishes in ``p - 2 + S`` stages of ``M/S``-sized port loads:
       ``β·M·(p - 2 + S)/S → β·M``, the true pipelined-broadcast collapse
       (cf. PAT's chain mode).  Right for ``segments > 1``.
+
+    ``tree`` overrides the gather tree (and, reversed, the ``"tree"``
+    broadcast topology) — e.g. ``baselines.two_level_tree`` for a
+    hierarchical mesh; it must be a contiguous tree over the same ``m``.
     """
     m = [int(x) for x in m]
     if any(x < 0 for x in m):
@@ -187,7 +211,12 @@ def allgatherv_schedule(m, root: int | None = None,
     if broadcast not in ("tree", "chain"):
         raise ValueError(broadcast)
     p = len(m)
-    tree = build_gather_tree(m, root=root)
+    if tree is None:
+        tree = build_gather_tree(m, root=root)
+    elif tree.p != p or (root is not None and tree.root != root):
+        raise ValueError("tree does not match this problem")
+    else:
+        _check_tree_fits(tree, m)
     total = sum(m)
     sched = ComposedSchedule("allgatherv", p, tree.root,
                              np.asarray([m], np.int64),
@@ -218,7 +247,7 @@ def allgatherv_schedule(m, root: int | None = None,
     return sched
 
 
-def alltoallv_schedule(size_matrix) -> ComposedSchedule:
+def alltoallv_schedule(size_matrix, tree_builder=None) -> ComposedSchedule:
     """alltoallv = p rooted scatter trees packed round-robin.
 
     Tree ``r`` scatters row ``r`` of the size matrix from fixed root ``r``
@@ -232,6 +261,12 @@ def alltoallv_schedule(size_matrix) -> ComposedSchedule:
     Rows whose off-diagonal entries are all zero need no tree at all, so
     the scheduler is linear in *active* rows (sparse MoE-style matrices
     at large p stay cheap).
+
+    ``tree_builder(row_sizes, root) -> GatherTree`` overrides the per-row
+    gather-tree construction (default ``build_gather_tree``) — e.g.
+    ``baselines.two_level_tree`` on a hierarchical mesh, so every source's
+    scatter hands each remote host ONE aggregated chunk over the DCN
+    instead of forwarding blocks across hosts repeatedly.
     """
     S = np.asarray(size_matrix, dtype=np.int64)
     if S.ndim != 2 or S.shape[0] != S.shape[1]:
@@ -243,9 +278,21 @@ def alltoallv_schedule(size_matrix) -> ComposedSchedule:
     row_starts = np.concatenate([[0], np.cumsum(row_sums)[:-1]]).astype(np.int64)
     sched = ComposedSchedule("alltoallv", p, -1, S, row_starts)
     active = [int(r) for r in np.nonzero(row_sums - np.diag(S) > 0)[0]]
+
+    def build_row_tree(r: int) -> GatherTree:
+        row = S[r].tolist()
+        if tree_builder is None:
+            return build_gather_tree(row, root=r)
+        t = tree_builder(row, r)
+        if t.p != p or t.root != r:
+            raise ValueError(f"tree_builder returned a tree for the wrong "
+                             f"problem (p={t.p}, root={t.root}; want "
+                             f"p={p}, root={r})")
+        _check_tree_fits(t, row)
+        return t
+
     tree_rounds = {
-        r: _tree_rounds(
-            build_gather_tree(S[r].tolist(), root=r).reversed_for_scatter())
+        r: _tree_rounds(build_row_tree(r).reversed_for_scatter())
         for r in active
     }
     nxt = {r: 0 for r in active}

@@ -10,6 +10,14 @@ non-blocking-receive behavior), or strictly in round order.
 
 Scatter is the time-reversed problem: identical completion time on the
 reversed tree, which we exploit (and property-test).
+
+Hierarchical meshes: real multi-host machines have (at least) two link
+classes — intra-host ICI and inter-host DCN — with very different (α, β).
+:class:`HostTopology` maps a rank to its host and
+:class:`HierarchicalCostParams` carries one :class:`CostParams` per link
+class; every simulator in this module charges each edge by the link class
+it crosses, and reduces EXACTLY (same code path, same floats) to the flat
+result when both classes carry the same parameters.
 """
 from __future__ import annotations
 
@@ -84,6 +92,139 @@ class CostParams:
                           time_unit="s", data_unit="byte")
 
 
+@dataclass(frozen=True)
+class HostTopology:
+    """Rank → host mapping of a hierarchical mesh.
+
+    Ranks are laid out host-major: host ``h`` owns the consecutive ranks
+    ``[h * devices_per_host, (h + 1) * devices_per_host)`` (the last host
+    may be smaller when ``p`` is not a multiple).  This is exactly how
+    ``jax.devices()`` orders a multi-process mesh (process 0's devices
+    first), so the mapping needs no per-rank table.
+    """
+
+    hosts: int
+    devices_per_host: int
+
+    def __post_init__(self) -> None:
+        if self.hosts < 1 or self.devices_per_host < 1:
+            raise ValueError("hosts and devices_per_host must be >= 1")
+
+    @property
+    def p(self) -> int:
+        return self.hosts * self.devices_per_host
+
+    def host_of(self, rank: int) -> int:
+        return int(rank) // self.devices_per_host
+
+    def same_host(self, a: int, b: int) -> bool:
+        return self.host_of(a) == self.host_of(b)
+
+    def host_slice(self, h: int, p: int | None = None) -> tuple[int, int]:
+        """[lo, hi) rank range of host ``h`` (clipped to ``p`` if given)."""
+        lo = h * self.devices_per_host
+        hi = lo + self.devices_per_host
+        if p is not None:
+            hi = min(hi, p)
+        return lo, hi
+
+    @staticmethod
+    def from_mesh(mesh) -> "HostTopology | None":
+        """Infer the host split of a JAX mesh.
+
+        Real multi-process meshes carry it in ``device.process_index``;
+        single-process emulations express it as an explicit ``host`` mesh
+        axis.  Returns a flat (1-host) topology when neither applies.
+        """
+        if mesh is None:
+            return None
+        total = int(mesh.devices.size)
+        procs = {getattr(d, "process_index", 0) for d in mesh.devices.flat}
+        hosts = len(procs)
+        if hosts <= 1:
+            axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            hosts = int(axes.get("host", 1))
+        if hosts < 1 or total % hosts:
+            raise ValueError(f"{total} devices do not split over "
+                             f"{hosts} hosts")
+        return HostTopology(hosts, total // hosts)
+
+
+@dataclass(frozen=True)
+class HierarchicalCostParams:
+    """Per-link-class machine parameters: ICI within a host, DCN across.
+
+    The two :class:`CostParams` must agree on units; every simulator that
+    accepts this class charges a transfer ``(src, dst, size)`` as
+    ``α_link + β_link · size`` with the link class decided by
+    ``topology.same_host(src, dst)``.  When both classes carry the same
+    (α, β) the simulators reduce EXACTLY to the flat result — they run
+    the same code path either way (property-tested).
+    """
+
+    ici: CostParams
+    dcn: CostParams
+    topology: HostTopology
+
+    # unit tags delegate to the (validated-identical) ICI side so callers
+    # can treat this like a CostParams for compatibility checks
+    @property
+    def time_unit(self) -> str:
+        return self.ici.time_unit
+
+    @property
+    def data_unit(self) -> str:
+        return self.ici.data_unit
+
+    def validate(self) -> None:
+        self.ici.validate()
+        self.dcn.validate()
+        self.ici.require_compatible(self.dcn)
+
+    def require_compatible(self, other) -> None:
+        if (self.time_unit, self.data_unit) != (other.time_unit,
+                                                other.data_unit):
+            raise ValueError(
+                f"unit mismatch: ({self.time_unit}, {self.data_unit}) vs "
+                f"({other.time_unit}, {other.data_unit})")
+
+    def edge(self, src: int, dst: int) -> CostParams:
+        """Link-class parameters of one transfer."""
+        return (self.ici if self.topology.same_host(src, dst)
+                else self.dcn)
+
+    def is_flat(self) -> bool:
+        return (self.ici.alpha, self.ici.beta) == (self.dcn.alpha,
+                                                   self.dcn.beta)
+
+    def scale_data(self, factor: float,
+                   data_unit: str = "row") -> "HierarchicalCostParams":
+        """Both βs scaled by ``factor`` (row-width → bytes conversion)."""
+        return HierarchicalCostParams(
+            CostParams(self.ici.alpha, self.ici.beta * factor,
+                       self.ici.time_unit, data_unit),
+            CostParams(self.dcn.alpha, self.dcn.beta * factor,
+                       self.dcn.time_unit, data_unit),
+            self.topology)
+
+
+def edge_params_fn(params):
+    """(src, dst) → (α, β) lookup for flat OR hierarchical parameters.
+
+    The single dispatch point all simulators (and the tuner's data-plane
+    cost views) share: a flat :class:`CostParams` yields the same pair for
+    every edge, so the hierarchical and flat paths run identical
+    arithmetic — the exact-reduction property tests rely on that.
+    """
+    if isinstance(params, HierarchicalCostParams):
+        ici = (params.ici.alpha, params.ici.beta)
+        dcn = (params.dcn.alpha, params.dcn.beta)
+        D = params.topology.devices_per_host
+        return lambda src, dst: ici if src // D == dst // D else dcn
+    ab = (params.alpha, params.beta)
+    return lambda src, dst: ab
+
+
 def collective_seconds(bytes_moved: float, link_bw: float = 50e9,
                        hops: int = 1, alpha_s: float = 1e-6) -> float:
     """Roofline collective term for bytes crossing one device's link.
@@ -94,19 +235,27 @@ def collective_seconds(bytes_moved: float, link_bw: float = 50e9,
     return hops * alpha_s + bytes_moved / link_bw
 
 
-def simulate_gather(tree: GatherTree, params: CostParams,
-                    skip_empty: bool = True, policy: str = "ready",
+def simulate_gather(tree: GatherTree, params, skip_empty: bool = True,
+                    policy: str = "ready",
                     include_construction: bool = False) -> float:
     """Completion time at the root under the 1-ported telephone model.
 
     policy='ready': receiver serves whichever child is ready first (models
     MPI non-blocking receives; ties by round).  policy='round': strict round
     order (models a blocking, schedule-order implementation).
+
+    ``params`` is a flat :class:`CostParams` or a
+    :class:`HierarchicalCostParams`; in the latter case every edge is
+    charged by the link class it crosses.
     """
     if policy not in ("ready", "round"):
         raise ValueError(policy)
     params.validate()
-    a, b = params.alpha, params.beta
+    ab = edge_params_fn(params)
+    # construction messages are constant-size cube exchanges; the top
+    # rounds cross hosts, so charge their startups at the slowest link
+    a = (max(params.ici.alpha, params.dcn.alpha)
+         if isinstance(params, HierarchicalCostParams) else params.alpha)
     # topological processing: a node's ready time needs all children's ready
     # times.  Children rounds < node's send round, so process edges grouped
     # by round; compute ready[] lazily by recursion instead (iterative DFS).
@@ -117,7 +266,8 @@ def simulate_gather(tree: GatherTree, params: CostParams,
         kids = tree.children_of(node)
         arrivals = []
         for e in kids:
-            cost = 0.0 if (e.size == 0 and skip_empty) else a + b * e.size
+            ea, eb = ab(e.child, node)
+            cost = 0.0 if (e.size == 0 and skip_empty) else ea + eb * e.size
             arrivals.append((ready[e.child], e.round, cost))
         if policy == "ready":
             arrivals.sort(key=lambda t: (t[0], t[1]))
@@ -135,8 +285,7 @@ def simulate_gather(tree: GatherTree, params: CostParams,
     return out
 
 
-def simulate_scatter(tree: GatherTree, params: CostParams,
-                     skip_empty: bool = True,
+def simulate_scatter(tree: GatherTree, params, skip_empty: bool = True,
                      include_construction: bool = False) -> float:
     """Scatter completion (last leaf served).  Time-symmetric to gather.
 
@@ -144,9 +293,12 @@ def simulate_scatter(tree: GatherTree, params: CostParams,
     serializes its children, and a node can forward only after it received
     its own subtree's data.  By reversing time, this equals gather
     completion on the same tree — we compute it directly for clarity.
+    Accepts flat or hierarchical parameters like :func:`simulate_gather`.
     """
     params.validate()
-    a, b = params.alpha, params.beta
+    ab = edge_params_fn(params)
+    a = (max(params.ici.alpha, params.dcn.alpha)
+         if isinstance(params, HierarchicalCostParams) else params.alpha)
     st = tree.reversed_for_scatter()
     # recv_done[x]: time x has received its subtree data from its parent.
     recv_done: dict[int, float] = {st.root: 0.0}
@@ -156,7 +308,8 @@ def simulate_scatter(tree: GatherTree, params: CostParams,
         kids = sorted(st.children_of(node), key=lambda e: e.round)
         t = base
         for e in kids:
-            cost = 0.0 if (e.size == 0 and skip_empty) else a + b * e.size
+            ea, eb = ab(node, e.child)
+            cost = 0.0 if (e.size == 0 and skip_empty) else ea + eb * e.size
             if cost == 0.0:
                 recv_done[e.child] = base
                 continue
@@ -204,24 +357,31 @@ def allreduce_time(p: int, size: int, params: CostParams) -> float:
 # composed collectives (repro.core.composed): round-synchronous predictor
 # --------------------------------------------------------------------------
 
-def simulate_composed(schedule, params: CostParams) -> float:
+def simulate_composed(schedule, params) -> float:
     """Completion time of a composed schedule under the round-synchronous
     execution the ppermute lowering implements: every global round is one
-    permutation padded to its largest transfer, so it costs
-    ``alpha + beta * max_size`` and rounds are serialized.
+    permutation padded to its largest transfer, so it costs the round's
+    critical transfer ``max_t (alpha_link + beta_link * size_t)`` —
+    ``alpha + beta * max_size`` on a flat machine — and rounds are
+    serialized.
 
     This intentionally models the SPMD data plane (padded ppermutes), not
     the asynchronous point-to-point machine of ``simulate_gather`` — the
     two coincide on a single tree when transfers within a round are
-    equal-sized.
+    equal-sized.  Accepts flat or hierarchical parameters.
     """
     params.validate()
-    a, b = params.alpha, params.beta
-    return sum(a + b * max(t.size for t in rnd)
+    ab = edge_params_fn(params)
+
+    def tcost(t):
+        a, b = ab(t.src, t.dst)
+        return a + b * t.size
+
+    return sum(max(tcost(t) for t in rnd)
                for rnd in schedule.rounds if rnd)
 
 
-def simulate_pipelined(rounds, total_rows: int, params: CostParams,
+def simulate_pipelined(rounds, total_rows: int, params,
                        segments: int) -> float:
     """Stage-synchronous completion time of a pipelined schedule.
 
@@ -251,9 +411,14 @@ def simulate_pipelined(rounds, total_rows: int, params: CostParams,
     from .pipeline import pipeline_rounds
 
     params.validate()
-    a, b = params.alpha, params.beta
+    ab = edge_params_fn(params)
     stages = pipeline_rounds([list(r) for r in rounds], segments, total_rows)
-    return sum(a + b * max(t[2] for t in st) for st in stages if st)
+
+    def tcost(t):
+        a, b = ab(t[0], t[1])
+        return a + b * t[2]
+
+    return sum(max(tcost(t) for t in st) for st in stages if st)
 
 
 def allgatherv_time(m, params: CostParams, root: int | None = None) -> float:

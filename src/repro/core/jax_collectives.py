@@ -48,6 +48,21 @@ TPU adaptation of the paper's point-to-point schedules (DESIGN.md §2):
   (Pallas kernels on TPU via ``use_pallas_dataplane``, jnp reference
   elsewhere) — and results are byte-identical to the monolithic path.
 
+* **hierarchical (multi-host) mode** — nothing in the lowering is
+  single-host-specific: a two-level schedule
+  (``baselines.two_level_tree`` and the ``tree=``/``tree_builder=``
+  overrides of the composed schedules) is just another contiguous tree,
+  so it flows through the same legalize → bucket → pipeline → ppermute
+  path.  On a mesh with an explicit ``(host, device)`` axis split the
+  executors take the axis TUPLE as ``axis_name`` (``("host",
+  "device")`` — ``lax.axis_index``/``lax.ppermute`` flatten it
+  host-major, exactly the rank layout
+  ``costmodel.HostTopology`` assumes), which works unchanged under real
+  ``jax.distributed`` multi-process meshes — the conformance lane in
+  ``tests/multidevice/child_multihost.py`` runs all four collectives on
+  an emulated 2-host x 4-device CPU mesh and asserts byte-identity
+  against the single-host oracle.
+
 The ordering invariant of the paper carries over: every payload is a
 consecutive rank range written at its global offset, so the root's buffer
 ends up in rank order with no reordering pass (zero-copy receives).
@@ -426,14 +441,16 @@ def scatterv_shard(buf_root: jax.Array, plan: GathervPlan, axis_name: str) -> ja
 # convenience drivers
 # --------------------------------------------------------------------------
 
-def run_gatherv(mesh: Mesh, axis_name: str, blocks: list[np.ndarray],
+def run_gatherv(mesh: Mesh, axis_name, blocks: list[np.ndarray],
                 root: int, bucket_rounds: int = 1, segments: int = 1,
-                wave_bin_ratio: float = 0.0):
+                wave_bin_ratio: float = 0.0, tree: GatherTree | None = None):
     """Host-facing helper: gather ragged ``blocks`` (list of (n_i, F)) to the
-    root over ``mesh[axis_name]``.  Returns (result (total, F), plan)."""
+    root over ``mesh[axis_name]``.  Returns (result (total, F), plan).
+    ``axis_name`` may be an axis tuple (``("host", "device")``) and
+    ``tree`` a custom contiguous tree (e.g. a two-level schedule)."""
     sizes = [int(b.shape[0]) for b in blocks]
     F = blocks[0].shape[1]
-    plan = plan_gatherv(sizes, root, bucket_rounds=bucket_rounds,
+    plan = plan_gatherv(sizes, root, tree=tree, bucket_rounds=bucket_rounds,
                         segments=segments, wave_bin_ratio=wave_bin_ratio)
     x = np.zeros((plan.p, plan.cap, F), blocks[0].dtype)
     for i, b in enumerate(blocks):
@@ -453,11 +470,12 @@ def run_gatherv(mesh: Mesh, axis_name: str, blocks: list[np.ndarray],
     return out[root, : plan.total], plan
 
 
-def run_scatterv(mesh: Mesh, axis_name: str, data: np.ndarray,
-                 sizes: list[int], root: int, segments: int = 1):
+def run_scatterv(mesh: Mesh, axis_name, data: np.ndarray,
+                 sizes: list[int], root: int, segments: int = 1,
+                 tree: GatherTree | None = None):
     """Scatter rank-ordered rows of ``data`` (total, F) from the root into
     ragged per-device blocks.  Returns (list of (n_i, F), plan)."""
-    plan = plan_gatherv(sizes, root, segments=segments)
+    plan = plan_gatherv(sizes, root, tree=tree, segments=segments)
     F = data.shape[1]
     xin = np.zeros((plan.p, plan.buf_rows, F), data.dtype)
     xin[root, : plan.total] = data
@@ -723,9 +741,10 @@ def alltoallv_shard(x_local: jax.Array, plan: ComposedPlan,
     return out
 
 
-def run_allgatherv(mesh: Mesh, axis_name: str, blocks: list[np.ndarray],
+def run_allgatherv(mesh: Mesh, axis_name, blocks: list[np.ndarray],
                    root: int | None = None, bucket_rounds: int = 1,
-                   segments: int = 1, wave_bin_ratio: float = 0.0):
+                   segments: int = 1, wave_bin_ratio: float = 0.0,
+                   schedule: ComposedSchedule | None = None):
     """Host-facing helper: allgatherv ragged ``blocks`` over the mesh.
     Returns ((p, total, F) array — every device's rank-ordered copy —
     and the plan)."""
@@ -735,7 +754,8 @@ def run_allgatherv(mesh: Mesh, axis_name: str, blocks: list[np.ndarray],
         raise ValueError(f"{len(blocks)} blocks for a "
                          f"{mesh.devices.size}-device mesh")
     plan = plan_allgatherv(sizes, root=root, bucket_rounds=bucket_rounds,
-                           segments=segments, wave_bin_ratio=wave_bin_ratio)
+                           segments=segments, wave_bin_ratio=wave_bin_ratio,
+                           schedule=schedule)
     x = np.zeros((plan.p, plan.cap, F), blocks[0].dtype)
     for i, b in enumerate(blocks):
         x[i, : sizes[i]] = b

@@ -28,8 +28,9 @@ import pickle
 from collections import OrderedDict
 from dataclasses import dataclass
 
-CACHE_VERSION = 3  # v3: per-tree alltoallv pipelining, payload-binned
-                   # waves (wave_bin_ratio), direct pairwise candidates
+CACHE_VERSION = 4  # v4: hierarchical meshes — mesh fingerprints carry the
+                   # host topology (hosts x devices-per-host), two-level
+                   # candidates join the enumeration
 PICKLE_PROTOCOL = 4  # fixed: byte-identical round-trips across sessions
 
 _UNLOADED = object()  # sentinel: entry known from the index, not yet read
@@ -48,14 +49,29 @@ def quantize_matrix(size_matrix, quantum: int) -> tuple[tuple[int, ...], ...]:
     return tuple(quantize_sizes(row, quantum) for row in size_matrix)
 
 
-def mesh_fingerprint(mesh) -> str:
-    """Stable identity of the execution substrate (cache key component)."""
+def mesh_fingerprint(mesh, topology=None) -> str:
+    """Stable identity of the execution substrate (cache key component).
+
+    Hierarchical substrates append ``|hosts=HxD`` so plans tuned for one
+    host topology can never be served to another: the same device count
+    split 2x4 vs 4x2 crosses the DCN differently and gets different
+    two-level schedules.  ``topology`` (a
+    :class:`~repro.core.costmodel.HostTopology`) overrides the split
+    inferred from the mesh (``device.process_index``, or an explicit
+    ``host`` axis) — plan-only services pass it directly.
+    """
+    from repro.core.costmodel import HostTopology
+
+    if topology is None:
+        topology = HostTopology.from_mesh(mesh)
+    tag = (f"|hosts={topology.hosts}x{topology.devices_per_host}"
+           if topology is not None and topology.hosts > 1 else "")
     if mesh is None:
-        return "cost-model"
+        return "cost-model" + tag
     dev = mesh.devices.flat[0]
     axes = ",".join(f"{n}={s}" for n, s in
                     zip(mesh.axis_names, mesh.devices.shape))
-    return f"{dev.platform}[{axes}]"
+    return f"{dev.platform}[{axes}]{tag}"
 
 
 @dataclass(frozen=True)

@@ -20,6 +20,16 @@ JAX mesh when one with >= 2 devices is available.
 All calibration math is in SECONDS and BYTES; ``Calibration.cost_params``
 returns a :class:`~repro.core.costmodel.CostParams` tagged accordingly,
 replacing the hardcoded constructor guesses.
+
+Hierarchical meshes calibrate PER AXIS: the ``device`` (ICI) axis and the
+``host`` (DCN) axis each get their own backend and fit —
+:func:`calibrate_axes` runs the sweep per axis and
+:class:`HierarchicalCalibration` packages the two fits into a
+:class:`~repro.core.costmodel.HierarchicalCostParams` for a concrete host
+topology.  ``MeshTimingBackend`` already measures one named mesh axis, so
+on a real 2-D ``(host, device)`` mesh the same class supplies both
+backends; :class:`SyntheticHierarchicalBackend` is the device-free
+two-link-class model machine.
 """
 from __future__ import annotations
 
@@ -28,7 +38,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.costmodel import CostParams
+from repro.core.costmodel import (CostParams, HierarchicalCostParams,
+                                  HostTopology)
 
 # geometric sweep: small sizes pin alpha, large sizes pin beta
 DEFAULT_SIZES = (1_024, 4_096, 16_384, 65_536, 262_144, 1_048_576)
@@ -89,6 +100,35 @@ def calibrate(backend, sizes=DEFAULT_SIZES, repeats: int = 5) -> Calibration:
                        backend.fingerprint())
 
 
+@dataclass(frozen=True)
+class HierarchicalCalibration:
+    """Per-axis fits of a hierarchical mesh: ICI (intra-host) and DCN
+    (inter-host), each a full :class:`Calibration`."""
+
+    ici: Calibration
+    dcn: Calibration
+
+    def cost_params(self, topology: HostTopology) -> HierarchicalCostParams:
+        p = HierarchicalCostParams(self.ici.cost_params(),
+                                   self.dcn.cost_params(), topology)
+        p.validate()
+        return p
+
+
+def calibrate_axes(backends: dict, sizes=DEFAULT_SIZES,
+                   repeats: int = 5) -> dict:
+    """Fit (α, β) independently per mesh axis.
+
+    ``backends`` maps an axis name (e.g. ``"device"``, ``"host"``) to a
+    timing backend; returns the same keys mapped to
+    :class:`Calibration`.  On a real 2-D mesh both backends are
+    ``MeshTimingBackend(mesh, axis)`` instances; device-free tests use
+    two :class:`SyntheticTimingBackend` machines.
+    """
+    return {axis: calibrate(b, sizes=sizes, repeats=repeats)
+            for axis, b in backends.items()}
+
+
 # --------------------------------------------------------------------------
 # backends
 # --------------------------------------------------------------------------
@@ -145,6 +185,59 @@ class SyntheticTimingBackend:
     def fingerprint(self) -> str:
         return (f"synthetic(alpha={self.alpha_s:.3e},"
                 f"beta={self.beta_s_per_byte:.3e},noise={self.noise})")
+
+
+class SyntheticHierarchicalBackend:
+    """Deterministic two-link-class model machine (ICI + DCN).
+
+    Wraps one :class:`SyntheticTimingBackend` per link class — hand
+    ``.axis("device")`` / ``.axis("host")`` to :func:`calibrate_axes` —
+    and serves as the measured-refinement executor for hierarchical
+    selection: ``measure(candidate, row_bytes)`` evaluates the
+    candidate's cost under the TRUE per-link parameters (every edge
+    charged by the link class it crosses) plus seeded noise, so tests can
+    assert the tuner's hierarchical pick also wins on the machine.
+    """
+
+    def __init__(self, topology: HostTopology,
+                 alpha_ici_s: float = 1e-6, beta_ici_s_per_byte: float = 2e-11,
+                 alpha_dcn_s: float = 50e-6,
+                 beta_dcn_s_per_byte: float = 16e-11,
+                 noise: float = 0.0, seed: int = 0):
+        self.topology = topology
+        self.ici = SyntheticTimingBackend(alpha_ici_s, beta_ici_s_per_byte,
+                                          noise, seed)
+        self.dcn = SyntheticTimingBackend(alpha_dcn_s, beta_dcn_s_per_byte,
+                                          noise, seed + 1)
+        self.noise = float(noise)
+        self._rng = np.random.default_rng(seed + 2)
+
+    def axis(self, name: str) -> SyntheticTimingBackend:
+        if name in ("device", "ici"):
+            return self.ici
+        if name in ("host", "dcn"):
+            return self.dcn
+        raise KeyError(name)
+
+    def true_params(self) -> HierarchicalCostParams:
+        return HierarchicalCostParams(self.ici.true_params(),
+                                      self.dcn.true_params(), self.topology)
+
+    def measure(self, candidate, row_bytes: int = 1) -> float:
+        """Noisy execution time of a Candidate on the true two-class
+        machine (``row_bytes`` converts row-weighted dataplane costs to
+        bytes, exactly like :meth:`SyntheticTimingBackend.measure`)."""
+        t = candidate.cost_fn(
+            self.true_params().scale_data(int(row_bytes)))
+        jitter = 1.0
+        if self.noise:
+            jitter = 1.0 + self.noise * float(self._rng.uniform(-1.0, 1.0))
+        return float(t) * jitter
+
+    def fingerprint(self) -> str:
+        return (f"synthetic_hier({self.topology.hosts}x"
+                f"{self.topology.devices_per_host},"
+                f"ici={self.ici.fingerprint()},dcn={self.dcn.fingerprint()})")
 
 
 class MeshTimingBackend:

@@ -35,7 +35,9 @@ from repro.core import extensions as ext
 from repro.core.composed import (allgatherv_schedule,
                                  alltoallv_direct_schedule,
                                  alltoallv_schedule)
-from repro.core.costmodel import CostParams, simulate_gather, simulate_scatter
+from repro.core.costmodel import (CostParams, HierarchicalCostParams,
+                                  HostTopology, edge_params_fn,
+                                  simulate_gather, simulate_scatter)
 from repro.core.treegather import (GatherTree, build_gather_tree,
                                    construction_alpha_rounds)
 
@@ -69,7 +71,7 @@ class Candidate:
         return self.builder()
 
 
-def plan_step_cost(plan, params: CostParams, congestion: float = 1.0) -> float:
+def plan_step_cost(plan, params, congestion: float = 1.0) -> float:
     """Round-synchronous cost of a lowered plan with a shared-fabric term.
 
     Each ppermute step is a padded permutation: its critical transfer
@@ -82,17 +84,30 @@ def plan_step_cost(plan, params: CostParams, congestion: float = 1.0) -> float:
     term that makes ``bucket_rounds`` a real trade-off: splitting a round
     into size buckets pays extra startups to stop small transfers from
     being padded to the round maximum.
+
+    With :class:`~repro.core.costmodel.HierarchicalCostParams` each pair
+    is charged by the link class it crosses: a step's critical transfer
+    is ``max_pair(alpha_link + beta_link * payload)`` and the spill term
+    amortizes the remaining pairs' *time* (not rows) over the ``p``
+    links.  Flat parameters run the identical arithmetic, so the
+    hierarchical cost reduces exactly to the flat one when both link
+    classes agree.
     """
     params.validate()
+    ab = edge_params_fn(params)
     total = 0.0
     for perm, payload, *_rest in plan.steps:
-        spill = (len(perm) - 1) * payload / plan.p
-        total += params.alpha + params.beta * (payload + congestion * spill)
+        pair_ab = [ab(s, d) for s, d in perm]
+        # bandwidth time per pair; the critical pair also pays its startup
+        bw = [b * payload for _, b in pair_ab]
+        ci = max(range(len(perm)), key=lambda i: pair_ab[i][0] + bw[i])
+        crit = pair_ab[ci][0] + bw[ci]
+        spill = (sum(bw) - bw[ci]) / plan.p
+        total += crit + congestion * spill
     return total
 
 
-def plan_pipeline_cost(plan, params: CostParams,
-                       congestion: float = 1.0) -> float:
+def plan_pipeline_cost(plan, params, congestion: float = 1.0) -> float:
     """Stage-synchronous cost of a PIPELINED lowered plan.
 
     Steps sharing a pipeline stage (``plan.stage_ids``) carry disjoint
@@ -112,8 +127,16 @@ def plan_pipeline_cost(plan, params: CostParams,
     one send and one receive, so the port term equals the step payload
     and the charge reduces exactly to ``plan_step_cost``'s; monolithic
     single-wave plans cost identically under both views.
+
+    With :class:`~repro.core.costmodel.HierarchicalCostParams` every
+    send/receive is accumulated in TIME (``beta_link * payload``) rather
+    than rows, so a port's DCN traffic weighs ``beta_dcn / beta_ici``
+    heavier than its ICI traffic and each step's startup is charged at
+    its slowest link; the arithmetic is shared with the flat path, so
+    equal link classes reduce exactly to the flat cost.
     """
     params.validate()
+    ab = edge_params_fn(params)
     stage_ids = plan.stage_ids or tuple(range(len(plan.steps)))
     stages: dict[int, list] = {}
     for sid, step in zip(stage_ids, plan.steps):
@@ -121,19 +144,22 @@ def plan_pipeline_cost(plan, params: CostParams,
     total = 0.0
     for sid in sorted(stages):
         steps = stages[sid]
-        sent: dict[int, int] = {}
-        recv: dict[int, int] = {}
-        padded = 0
+        sent: dict[int, float] = {}
+        recv: dict[int, float] = {}
+        padded = 0.0
+        alpha_term = 0.0
         for perm, payload, *_ in steps:
-            padded += payload * len(perm)
-            for s, d in perm:
-                sent[s] = sent.get(s, 0) + payload
-                recv[d] = recv.get(d, 0) + payload
-        port = max(max(sent.values(), default=0),
-                   max(recv.values(), default=0))
+            pair_ab = [ab(s, d) for s, d in perm]
+            alpha_term += max(a for a, _ in pair_ab)
+            for (s, d), (_, b) in zip(perm, pair_ab):
+                bt = b * payload
+                padded += bt
+                sent[s] = sent.get(s, 0.0) + bt
+                recv[d] = recv.get(d, 0.0) + bt
+        port = max(max(sent.values(), default=0.0),
+                   max(recv.values(), default=0.0))
         spill = (padded - port) / plan.p
-        total += (params.alpha * len(steps)
-                  + params.beta * (port + congestion * spill))
+        total += alpha_term + port + congestion * spill
     return total
 
 
@@ -152,26 +178,38 @@ def _tree_candidate(name: str, op: str, tree: GatherTree,
 # --------------------------------------------------------------------------
 
 def rooted_model_candidates(op: str, m, root: int, params: CostParams,
-                            include_extensions: bool = False
+                            include_extensions: bool = False,
+                            topology: HostTopology | None = None
                             ) -> list[Candidate]:
     """Point-to-point α-β view of the gatherv/scatterv algorithm zoo.
 
     The TUW candidates carry their construction cost (overlapped gating
     for gatherv, serial ``(2D-1) * alpha`` for scatterv and the exotic
     variants); the oblivious baselines are construction-free — that
-    asymmetry IS the paper's crossover.
+    asymmetry IS the paper's crossover.  The two-level candidate is the
+    topology-derived TUW-in-TUW schedule (``baselines.two_level_tree``,
+    sized by ``topology`` when given), so it pays both phases' serial
+    construction.  This view is FLAT-only (the extension simulators read
+    ``params.alpha`` directly); hierarchical parameters select through
+    the dataplane view.
     """
     if op not in ("gatherv", "scatterv"):
         raise ValueError(op)
     m = [int(x) for x in m]
     p = len(m)
     constr = construction_alpha_rounds(p)
+    D = topology.devices_per_host if topology is not None else 16
+    hosts = -(-p // D)
+    constr2 = (construction_alpha_rounds(min(D, p))
+               + construction_alpha_rounds(hosts))
 
-    def sim(tree):
+    def sim(tree, c=constr):
         if op == "gatherv":
+            if tree.name.startswith("two_level"):
+                return lambda P: simulate_gather(tree, P) + c * P.alpha
             return lambda P: ext.simulate_gather_overlapped_construction(
                 tree, P)
-        return lambda P: simulate_scatter(tree, P) + constr * P.alpha
+        return lambda P: simulate_scatter(tree, P) + c * P.alpha
 
     def sim_plain(tree):
         if op == "gatherv":
@@ -179,13 +217,15 @@ def rooted_model_candidates(op: str, m, root: int, params: CostParams,
         return lambda P: simulate_scatter(tree, P)
 
     tuw = build_gather_tree(m, root=root)
+    two_level = baselines.two_level_tree(m, root, D)
     zoo = [
         ("binomial", baselines.binomial_tree(m, root)),
         ("knomial3", baselines.knomial_tree(m, root, 3)),
         ("linear", baselines.linear_tree(m, root)),
-        ("two_level", baselines.two_level_tree(m, root, 16)),
     ]
-    out = [_tree_candidate("tuw", op, tuw, sim(tuw))]
+    out = [_tree_candidate("tuw", op, tuw, sim(tuw)),
+           _tree_candidate("two_level", op, two_level,
+                           sim(two_level, constr2))]
     out += [_tree_candidate(name, op, tree, sim_plain(tree))
             for name, tree in zoo]
     thr = ext.auto_threshold(m, params) if params.beta > 0 else None
@@ -212,7 +252,9 @@ def rooted_model_candidates(op: str, m, root: int, params: CostParams,
 
 def rooted_dataplane_candidates(op: str, m, root: int,
                                 buckets=(1, 2, 4),
-                                segments=(1,)) -> list[Candidate]:
+                                segments=(1,),
+                                topology: HostTopology | None = None
+                                ) -> list[Candidate]:
     """Lowered-plan view: only executable schedules, costed by their padded
     ppermute steps.  The linear tree legalizes into serialized waves, so
     its step count (p-1 startups) is faithfully represented.
@@ -223,6 +265,14 @@ def rooted_dataplane_candidates(op: str, m, root: int,
     stages) instead of the serialized per-step charge — pipelined plans
     ARE executed stage-by-stage, so each view prices its own execution
     discipline.
+
+    ``topology`` (with > 1 host) adds the two-level hierarchical schedule
+    (``two_level``): TUW inside every host, TUW over the host leaders —
+    each host's data crosses the DCN exactly once.  It lowers through the
+    ordinary ``plan_gatherv`` path (the tree is contiguous), so it is
+    executable wherever the flat trees are; under flat parameters it
+    costs about the same as ``tuw``, under hierarchical parameters the
+    per-link charging decides the race.
     """
     from repro.core.jax_collectives import plan_gatherv
 
@@ -231,12 +281,17 @@ def rooted_dataplane_candidates(op: str, m, root: int,
     m = [int(x) for x in m]
     tuw = build_gather_tree(m, root=root)
     lin = baselines.linear_tree(m, root)
+    trees = [(tuw, "tuw"), (lin, "linear")]
+    if topology is not None and topology.hosts > 1:
+        trees.append((baselines.two_level_tree(
+            m, root, topology.devices_per_host), "two_level"))
     out = []
-    for tree, base in ((tuw, "tuw"), (lin, "linear")):
-        for b in buckets if tree is tuw else (1,):
+    for tree, base in trees:
+        for b in buckets if base == "tuw" else (1,):
             plan = plan_gatherv(m, root, tree=tree, bucket_rounds=b)
+            name = "two_level" if base == "two_level" else f"{base}(b={b})"
             out.append(Candidate(
-                f"{base}(b={b})", op, True,
+                name, op, True,
                 cost_fn=lambda P, pl=plan: plan_step_cost(pl, P),
                 builder=lambda pl=plan: pl,
                 bytes_exact=plan.tree_bytes_exact, bucket_rounds=b))
@@ -259,7 +314,9 @@ def rooted_dataplane_candidates(op: str, m, root: int,
 def composed_dataplane_candidates(op: str, arg, root: int | None = None,
                                   buckets=(1, 2, 4),
                                   segments=(1,),
-                                  wave_bins=()) -> list[Candidate]:
+                                  wave_bins=(),
+                                  topology: HostTopology | None = None
+                                  ) -> list[Candidate]:
     """``bucket_rounds`` variants of the composed TUW schedules, costed on
     their lowered plans.  Bucketing trades startups (more ppermutes) for
     padding (smaller payloads) — a pure α-β tradeoff the selector decides
@@ -283,6 +340,14 @@ def composed_dataplane_candidates(op: str, arg, root: int | None = None,
     (``direct`` / ``direct(g2)`` / ``direct(S=s,g2)``): exact bytes, no
     tree forwarding, ``p - 1`` startups — the large-message regular
     all-to-all the packed trees must beat to be selected.
+
+    ``topology`` (with > 1 host) adds the two-level hierarchical
+    schedules (``two_level_composed`` and its ``g``-binned variants):
+    allgatherv gathers on the two-level tree and broadcasts down its
+    reversal; alltoallv builds every source's scatter tree two-level, so
+    each remote host receives ONE aggregated DCN chunk per source instead
+    of per-block (or repeatedly forwarded) crossings.  Both lower through
+    the unchanged legalize → bucket → lower path.
     """
     from repro.core.jax_collectives import plan_allgatherv, plan_alltoallv
 
@@ -349,6 +414,29 @@ def composed_dataplane_candidates(op: str, arg, root: int | None = None,
                     continue
                 add(out, f"direct(S={s},{bin_tag(wb)})", dlower(s, wb),
                     segments=s, wave_bin_ratio=wb)
+    if topology is not None and topology.hosts > 1:
+        D = topology.devices_per_host
+        if op == "allgatherv":
+            m = [int(x) for x in arg]
+            # free root: pick the largest block's rank (Lemma-1 argmin of
+            # received bytes) so the two-level tree has a concrete root
+            r0 = int(np.argmax(m)) if root is None else root
+            tl = allgatherv_schedule(
+                m, root=r0, tree=baselines.two_level_tree(m, r0, D))
+            hlower = lambda wb=0.0: plan_allgatherv(
+                arg, root=root, wave_bin_ratio=wb, validate=False,
+                schedule=tl)
+        else:
+            tl = alltoallv_schedule(
+                np.asarray(arg, np.int64),
+                tree_builder=lambda row, r: baselines.two_level_tree(
+                    row, r, D))
+            hlower = lambda wb=0.0: plan_alltoallv(
+                arg, wave_bin_ratio=wb, validate=False, schedule=tl)
+        add(out, "two_level_composed", hlower())
+        for wb in wave_bins:
+            add(out, f"two_level_composed({bin_tag(wb)})", hlower(wb),
+                wave_bin_ratio=wb)
     return out
 
 
@@ -357,24 +445,35 @@ def enumerate_candidates(op: str, arg, root: int | None,
                          include_extensions: bool = False,
                          buckets=(1, 2, 4),
                          segments=(1,),
-                         wave_bins=()) -> list[Candidate]:
+                         wave_bins=(),
+                         topology: HostTopology | None = None
+                         ) -> list[Candidate]:
     """All candidates for one problem.  ``arg`` is the size vector (rooted
     and allgatherv ops) or the p x p size matrix (alltoallv); ``segments``
     adds pipelined data-plane variants (``S > 1`` entries only) and
-    ``wave_bins`` payload-binned composed variants."""
+    ``wave_bins`` payload-binned composed variants.  ``topology`` (> 1
+    host) adds the hierarchical two-level schedules — candidate costs then
+    accept :class:`~repro.core.costmodel.HierarchicalCostParams` in the
+    dataplane view (the model view's extension simulators are flat-only).
+    """
     if op not in OPS:
         raise ValueError(f"unknown op {op!r}; expected one of {OPS}")
     if view not in ("model", "dataplane"):
         raise ValueError(view)
+    if view == "model" and isinstance(params, HierarchicalCostParams):
+        raise ValueError("the model view is flat-only; select hierarchical "
+                         "machines through view='dataplane'")
     if op in ("gatherv", "scatterv"):
         if root is None:
             raise ValueError(f"{op} needs a root")
         if view == "model":
             return rooted_model_candidates(op, arg, root, params,
-                                           include_extensions)
-        return rooted_dataplane_candidates(op, arg, root, buckets, segments)
+                                           include_extensions, topology)
+        return rooted_dataplane_candidates(op, arg, root, buckets, segments,
+                                           topology)
     # composed ops have a single machine view: the schedule IS the
     # round-synchronous data plane (simulate_composed == bucket-1 steps)
     return composed_dataplane_candidates(op, arg, root=root, buckets=buckets,
                                          segments=segments,
-                                         wave_bins=wave_bins)
+                                         wave_bins=wave_bins,
+                                         topology=topology)

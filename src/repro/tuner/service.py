@@ -26,6 +26,14 @@ Selection costs are computed in BYTES: row counts are scaled by
 ``row_bytes`` (feature width x itemsize) so the α-vs-β balance — which
 decides e.g. how many bucket rounds pay off — is physical, not
 row-count-relative.
+
+Hierarchical meshes: pass ``topology=HostTopology(hosts, dev_per_host)``
+(inferred automatically from a real multi-process mesh) and either a
+:class:`~repro.core.costmodel.HierarchicalCostParams` as ``params`` or a
+:class:`~repro.tuner.calibrate.HierarchicalCalibration` — the service
+then races the two-level schedules against the flat ones under per-link
+(α, β) and keys the plan cache by the host split, so a 2x4 and a 4x2
+machine never share plans.
 """
 from __future__ import annotations
 
@@ -35,11 +43,12 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.costmodel import CostParams
+from repro.core.costmodel import (CostParams, HierarchicalCostParams,
+                                  HostTopology)
 
 from .cache import (PlanCache, PlanKey, mesh_fingerprint, quantize_matrix,
                     quantize_sizes)
-from .calibrate import Calibration, OnlineCalibrator
+from .calibrate import Calibration, HierarchicalCalibration, OnlineCalibrator
 from .candidates import OPS, enumerate_candidates
 from .select import Selection, select
 
@@ -85,8 +94,8 @@ class PlannerService:
     """
 
     def __init__(self, mesh=None, axis_name: str = "x", quantum: int = 128,
-                 calibration: Calibration | None = None,
-                 params: CostParams | None = None,
+                 calibration=None,
+                 params=None,
                  cache: PlanCache | None = None,
                  cache_dir: str | None = None,
                  max_cached_plans: int = 256,
@@ -96,16 +105,42 @@ class PlannerService:
                  wave_bins=(2.0,),
                  hysteresis: float = 0.05,
                  measure=None, top_k: int = 3,
-                 calibrator: OnlineCalibrator | None = None):
-        if params is not None and calibration is not None:
-            params.require_compatible(calibration.cost_params())
+                 calibrator: OnlineCalibrator | None = None,
+                 topology: HostTopology | None = None):
         self.mesh = mesh
         self.axis = axis_name
         self.quantum = int(quantum)
+        # host topology: explicit beats mesh-inferred (plan-only services
+        # have no mesh to infer from); it keys the cache and gates the
+        # hierarchical two-level candidates
+        self.topology = (topology if topology is not None
+                         else HostTopology.from_mesh(mesh))
+        if calibration is not None and isinstance(calibration,
+                                                  HierarchicalCalibration):
+            if self.topology is None or self.topology.hosts < 2:
+                raise ValueError("a HierarchicalCalibration needs a "
+                                 "multi-host topology")
+            cal_params = calibration.cost_params(self.topology)
+        elif calibration is not None:
+            cal_params = calibration.cost_params()
+        else:
+            cal_params = None
+        if params is not None and cal_params is not None:
+            params.require_compatible(cal_params)
         self.params = (params if params is not None
-                       else (calibration.cost_params() if calibration
+                       else (cal_params if cal_params is not None
                              else CostParams.tpu_ici()))
         self.params.validate()
+        if isinstance(self.params, HierarchicalCostParams):
+            # the params' host mapping must be THE topology candidates and
+            # cache keys use — a mismatch would silently price ICI hops as
+            # DCN (and cache the wrong plan under the right fingerprint)
+            if self.topology is None:
+                self.topology = self.params.topology
+            elif self.params.topology != self.topology:
+                raise ValueError(
+                    f"params topology {self.params.topology} != service "
+                    f"topology {self.topology}")
         self.cache = cache if cache is not None else PlanCache(
             cache_dir, max_entries=max_cached_plans)
         self.buckets = tuple(buckets)
@@ -118,6 +153,13 @@ class PlannerService:
         self.top_k = int(top_k)
         self.calibrator = calibrator
         if calibrator is not None:
+            if isinstance(self.params, HierarchicalCostParams):
+                # the online refit is a 2-parameter (α, β) fit; per-axis
+                # refitting would need one ledger per link class — refit
+                # each axis offline (calibrate_axes) and rebuild instead
+                raise ValueError("online calibration is flat-only; refit "
+                                 "hierarchical axes via calibrate_axes and "
+                                 "rebuild the service")
             # the refit loop rewrites self.params from the calibrator, so
             # the starting params must already be in its units (s, bytes)
             self.params.require_compatible(calibrator.prior.cost_params())
@@ -143,7 +185,8 @@ class PlannerService:
             sig = quantize_sizes(arg, self.quantum)
             p = len(sig)
         return PlanKey(op, p, sig, -1 if root is None else int(root),
-                       f"{dtype}r{int(row_bytes)}", mesh_fingerprint(self.mesh))
+                       f"{dtype}r{int(row_bytes)}",
+                       mesh_fingerprint(self.mesh, self.topology))
 
     def plan_record(self, op: str, arg, root: int | None = None,
                     dtype: str = "float32", row_bytes: int = 1) -> PlanRecord:
@@ -159,14 +202,18 @@ class PlannerService:
             return rec
         qarg = key.signature
         # selection params in bytes: scale the per-row β by the row width
-        sel_params = CostParams(self.params.alpha,
-                                self.params.beta * max(1, int(row_bytes)),
-                                self.params.time_unit, "row")
+        rb = max(1, int(row_bytes))
+        if isinstance(self.params, HierarchicalCostParams):
+            sel_params = self.params.scale_data(rb)
+        else:
+            sel_params = CostParams(self.params.alpha,
+                                    self.params.beta * rb,
+                                    self.params.time_unit, "row")
         cands = enumerate_candidates(op, qarg, root, sel_params,
                                      view="dataplane", buckets=self.buckets,
                                      segments=self.segments,
-                                     wave_bins=self.wave_bins)
-        rb = max(1, int(row_bytes))
+                                     wave_bins=self.wave_bins,
+                                     topology=self.topology)
         cal = self.calibrator
         if cal is not None:
             cal = _RowScaledCalibrator(cal, rb)
@@ -357,9 +404,16 @@ class PlannerService:
 
     @property
     def stats(self) -> dict:
+        if isinstance(self.params, HierarchicalCostParams):
+            params = ("hier",
+                      (self.params.ici.alpha, self.params.ici.beta),
+                      (self.params.dcn.alpha, self.params.dcn.beta),
+                      self.params.time_unit, self.params.data_unit)
+        else:
+            params = (self.params.alpha, self.params.beta,
+                      self.params.time_unit, self.params.data_unit)
         return {**self.cache.stats,
                 "compiled": len(self._compiled),
                 "compiled_hits": self.compiled_hits,
                 "compiled_misses": self.compiled_misses,
-                "params": (self.params.alpha, self.params.beta,
-                           self.params.time_unit, self.params.data_unit)}
+                "params": params}

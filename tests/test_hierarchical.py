@@ -1,0 +1,431 @@
+"""Hierarchical-mesh tests (fast lane, no devices).
+
+Covers the whole two-level stack: structural properties of the
+topology-derived schedules (exact row partition on random size vectors
+and host splits), the exact reduction of hierarchical cost simulation to
+the flat result when both link classes agree, the tuner crossover
+(β_dcn ≫ β_ici selects a two-level schedule on MoE-shaped signatures and
+its synthetic-machine time beats the flat plan; one-host data stays
+flat), host-topology plan-cache keying, per-axis calibration, and the
+``checkpoint.store`` unit-consistency regression.  The real multi-process
+byte-identity lane is ``tests/test_multihost.py``.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import baselines
+from repro.core.composed import allgatherv_schedule, alltoallv_schedule
+from repro.core.costmodel import (CostParams, HierarchicalCostParams,
+                                  HostTopology, simulate_composed,
+                                  simulate_gather, simulate_scatter)
+from repro.core.distributions import block_sizes
+from repro.core.jax_collectives import (plan_alltoallv, plan_gatherv)
+from repro.core.pipeline import (execute_alltoallv_plan_numpy,
+                                 execute_scatter_steps_numpy,
+                                 execute_steps_numpy)
+from repro.core.treegather import build_gather_tree
+from repro.tuner import (HierarchicalCalibration, PlannerService,
+                         SyntheticHierarchicalBackend, calibrate_axes,
+                         enumerate_candidates, mesh_fingerprint,
+                         plan_pipeline_cost, plan_step_cost, select)
+
+ICI = CostParams(1e-6, 2e-11, "s", "byte")
+
+
+def _hier(topo, alpha_ratio=10.0, beta_ratio=8.0):
+    return HierarchicalCostParams(
+        ICI, CostParams(ICI.alpha * alpha_ratio, ICI.beta * beta_ratio,
+                        "s", "byte"), topo)
+
+
+def _moe_matrix(p, scale, seed=0, conc=0.3):
+    rng = np.random.default_rng(seed)
+    loads = rng.dirichlet(np.full(p, conc))
+    return (np.outer(np.full(p, 1.0 / p), loads) * p * scale).astype(np.int64)
+
+
+# ---------------------------------------------------- two-level structure
+
+
+@given(st.lists(st.integers(min_value=0, max_value=300), min_size=1,
+                max_size=40),
+       st.integers(min_value=1, max_value=12),
+       st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=60, deadline=None)
+def test_two_level_tree_partitions_rows_exactly(m, D, seed):
+    """Satellite property: for random size vectors and host splits the
+    two-level tree is a spanning tree whose edges carry exactly their
+    consecutive-rank-range subtree data (no overlap, no loss) — that is
+    ``GatherTree.validate``'s contract, plus DCN-crossing honesty: every
+    inter-host edge is a leader-to-leader edge."""
+    p = len(m)
+    root = seed % p
+    topo = HostTopology(-(-p // D), D)
+    tree = baselines.two_level_tree(m, root, D)
+    tree.validate(m)
+    # intra edges never cross hosts; inter edges always do
+    intra_rounds = max((e.round + 1 for e in tree.edges
+                        if topo.same_host(e.child, e.parent)), default=0)
+    for e in tree.edges:
+        if topo.same_host(e.child, e.parent):
+            assert e.round < intra_rounds
+        else:
+            assert e.round >= intra_rounds
+
+
+@given(st.lists(st.integers(min_value=0, max_value=100), min_size=2,
+                max_size=18),
+       st.integers(min_value=1, max_value=6),
+       st.integers(min_value=0, max_value=1_000))
+@settings(max_examples=30, deadline=None)
+def test_two_level_composed_schedules_are_valid_and_deliver(m, D, seed):
+    """The composed two-level schedules keep the zero-copy invariant and
+    deliver every block (symbolic dataflow execution)."""
+    p = len(m)
+    root = seed % p
+    sched = allgatherv_schedule(m, root=root,
+                                tree=baselines.two_level_tree(m, root, D))
+    sched.validate()
+    cov = sched.simulate_dataflow()
+    live = {i for i in range(p) if m[i] > 0}
+    if live:
+        for dst in range(p):
+            assert live <= cov.get((dst, 0), set())
+    S = np.outer(np.asarray(m), np.ones(p, np.int64)) // max(1, p // 2)
+    tl = alltoallv_schedule(
+        S, tree_builder=lambda row, r: baselines.two_level_tree(row, r, D))
+    tl.validate()
+    cov = tl.simulate_dataflow()
+    for r in range(p):
+        for j in range(p):
+            if S[r][j] > 0:
+                assert j in cov.get((j, r), set())
+
+
+def test_two_level_tree_crosses_dcn_once_per_host_chunk():
+    """The point of the hierarchy: flat TUW trees whose cubes straddle
+    host boundaries re-cross the DCN; the two-level tree's intra edges
+    never do, and only leaders talk across hosts."""
+    topo = HostTopology(4, 3)
+    m = [100] * topo.p
+    flat = build_gather_tree(m, root=0)
+    two = baselines.two_level_tree(m, 0, 3)
+
+    def dcn_bytes(tree):
+        return sum(e.size for e in tree.edges
+                   if not topo.same_host(e.child, e.parent))
+
+    assert dcn_bytes(two) < dcn_bytes(flat)
+
+
+# ------------------------------------------------- exact flat reduction
+
+
+@given(st.lists(st.integers(min_value=0, max_value=500), min_size=2,
+                max_size=24),
+       st.integers(min_value=1, max_value=8),
+       st.integers(min_value=0, max_value=100))
+@settings(max_examples=30, deadline=None)
+def test_hierarchical_params_reduce_to_flat_when_equal(m, D, seed):
+    """Satellite property: with α_dcn=α_ici and β_dcn=β_ici every
+    hierarchical simulation equals the flat CostParams result EXACTLY
+    (same code path, same floats)."""
+    p = len(m)
+    root = seed % p
+    topo = HostTopology(-(-p // D), D)
+    flat = CostParams(1.3, 0.7)
+    eq = HierarchicalCostParams(flat, flat, topo)
+    for tree in (build_gather_tree(m, root=root),
+                 baselines.two_level_tree(m, root, D)):
+        assert simulate_gather(tree, eq) == simulate_gather(tree, flat)
+        assert simulate_scatter(tree, eq) == simulate_scatter(tree, flat)
+    sched = allgatherv_schedule(m, root=root)
+    assert simulate_composed(sched, eq) == simulate_composed(sched, flat)
+    plan = plan_gatherv(m, root, segments=2)
+    assert plan_step_cost(plan, eq) == plan_step_cost(plan, flat)
+    assert plan_pipeline_cost(plan, eq) == plan_pipeline_cost(plan, flat)
+
+
+def test_hierarchical_params_validate_and_scale():
+    topo = HostTopology(2, 4)
+    hp = _hier(topo)
+    hp.validate()
+    assert hp.edge(0, 3) is hp.ici and hp.edge(0, 4) is hp.dcn
+    assert not hp.is_flat()
+    scaled = hp.scale_data(4096)
+    assert scaled.ici.beta == hp.ici.beta * 4096
+    assert scaled.dcn.beta == hp.dcn.beta * 4096
+    with pytest.raises(ValueError):
+        HierarchicalCostParams(ICI, CostParams(1.8, 1.4e-3), topo).validate()
+    with pytest.raises(ValueError):
+        HostTopology(0, 4)
+    with pytest.raises(ValueError):
+        enumerate_candidates("gatherv", [1, 2], 0, hp, view="model")
+
+
+# ---------------------------------------------------- tuner crossover
+
+
+def test_tuner_selects_two_level_on_hierarchical_machine():
+    """Satellite differential: β_dcn ≫ β_ici (ratio 8) on a decode-shaped
+    MoE dispatch matrix must select a two-level schedule, and the
+    synthetic hierarchical machine must agree it beats every flat plan;
+    with all data on the root's host the flat TUW family wins."""
+    topo = HostTopology(2, 6)
+    hp = _hier(topo, alpha_ratio=50.0, beta_ratio=8.0)
+    row_bytes = 4096
+    sel_params = hp.scale_data(row_bytes)
+    S = _moe_matrix(topo.p, 256, seed=0)
+    cands = enumerate_candidates("alltoallv", S, None, sel_params,
+                                 view="dataplane", segments=(1, 2, 4),
+                                 wave_bins=(2.0,), topology=topo)
+    sel = select(cands, sel_params)
+    assert sel.chosen.startswith("two_level"), sel.costs
+    # measured on the true two-class machine: the pick beats every flat plan
+    machine = SyntheticHierarchicalBackend(
+        topo, alpha_ici_s=ICI.alpha, beta_ici_s_per_byte=ICI.beta,
+        alpha_dcn_s=ICI.alpha * 50, beta_dcn_s_per_byte=ICI.beta * 8,
+        noise=0.0)
+    times = {c.name: machine.measure(c, row_bytes=row_bytes) for c in cands}
+    best_flat = min(t for n, t in times.items()
+                    if not n.startswith("two_level"))
+    assert times[sel.chosen] < best_flat
+
+    # all data on one host (the root's): hierarchy has nothing to win
+    m = [0] * topo.p
+    for i in range(topo.devices_per_host):
+        m[i] = 5_000
+    gc = enumerate_candidates("gatherv", m, 0, sel_params, view="dataplane",
+                              topology=topo)
+    gsel = select(gc, sel_params)
+    assert not gsel.chosen.startswith("two_level"), gsel.costs
+
+
+def test_tuner_selects_two_level_gatherv_on_host_straddling_cubes():
+    """Non-power-of-two hosts make flat TUW cubes straddle host
+    boundaries, re-crossing the DCN — the two-level tree must win the
+    gatherv race once β_dcn dominates."""
+    topo = HostTopology(4, 3)
+    hp = _hier(topo, alpha_ratio=10.0, beta_ratio=8.0)
+    m = [50_000] * topo.p
+    cands = enumerate_candidates("gatherv", m, 0, hp, view="dataplane",
+                                 topology=topo)
+    sel = select(cands, hp)
+    assert sel.chosen == "two_level", sel.costs
+
+
+def test_planner_service_selects_hierarchical_vs_flat_per_signature():
+    """PlannerService end-to-end: hierarchical params + topology select
+    two-level for the host-spread MoE signature, and the same service
+    keeps a flat plan for a one-host signature; plans are cached under
+    topology-distinct keys."""
+    topo = HostTopology(2, 6)
+    # decode-shaped blocks are tens of rows; a fine quantum keeps the
+    # signature in the α_dcn-dominated regime the hierarchy wins
+    svc = PlannerService(mesh=None, quantum=16, topology=topo,
+                         params=_hier(topo, 50.0, 8.0),
+                         segments=(1, 2), wave_bins=(2.0,))
+    S = _moe_matrix(topo.p, 256, seed=0)
+    rec = svc.plan_record("alltoallv", S, row_bytes=4096)
+    assert rec.algo.startswith("two_level"), rec.costs
+    m = [0] * topo.p
+    m[0] = 4_096
+    m[1] = 4_096
+    rec2 = svc.plan_record("gatherv", m, root=0, row_bytes=4096)
+    assert not rec2.algo.startswith("two_level"), rec2.costs
+    # both plans execute correctly through the numpy oracle
+    p = topo.p
+    F = 2
+    rng = np.random.default_rng(1)
+    Sq = np.asarray(svc._key("alltoallv", S, None, "float32", 4096).signature)
+    blocks = [[rng.integers(0, 1000, (int(Sq[i, j]), F))
+               for j in range(p)] for i in range(p)]
+    got = execute_alltoallv_plan_numpy(rec.plan, blocks)
+    for j in range(p):
+        want = np.concatenate([blocks[i][j] for i in range(p)], axis=0)
+        np.testing.assert_array_equal(got[j], want)
+
+
+def test_service_guards_hierarchical_misuse():
+    """stats stays readable under hierarchical params; a params/topology
+    mismatch is rejected instead of silently mispricing link classes; a
+    hierarchical params object supplies the topology when none is given."""
+    topo = HostTopology(2, 4)
+    svc = PlannerService(mesh=None, params=_hier(topo))  # topology adopted
+    assert svc.topology == topo
+    assert svc.stats["params"][0] == "hier"
+    with pytest.raises(ValueError, match="topology"):
+        PlannerService(mesh=None, topology=HostTopology(4, 2),
+                       params=_hier(topo))
+
+
+def test_schedule_overrides_reject_mismatched_trees():
+    """A caller-supplied tree built for different block sizes (or a
+    non-contiguous tree) must be rejected up front — the tuner lowers
+    with validate=False, so a silent mismatch would corrupt data."""
+    m = [10, 20, 30, 40]
+    with pytest.raises(ValueError, match="does not fit"):
+        allgatherv_schedule(m, root=0,
+                            tree=baselines.two_level_tree([1, 1, 1, 1], 0, 2))
+    with pytest.raises(ValueError, match="does not fit"):
+        allgatherv_schedule(m, root=0,
+                            tree=baselines.binomial_tree(m, 0))  # lo = -1
+    S = np.full((4, 4), 5, np.int64)
+    with pytest.raises(ValueError, match="wrong problem"):
+        alltoallv_schedule(
+            S, tree_builder=lambda row, r: build_gather_tree(row, root=0))
+    with pytest.raises(ValueError, match="does not fit"):
+        alltoallv_schedule(
+            S, tree_builder=lambda row, r: baselines.two_level_tree(
+                [1] * 4, r, 2))
+
+
+def test_online_calibrator_rejected_with_hierarchical_params():
+    topo = HostTopology(2, 4)
+    from repro.tuner import Calibration, OnlineCalibrator
+
+    prior = Calibration(1e-6, 2e-11, 1.0, 1, "t")
+    with pytest.raises(ValueError, match="flat-only"):
+        PlannerService(mesh=None, topology=topo, params=_hier(topo),
+                       calibrator=OnlineCalibrator(prior))
+
+
+# ------------------------------------------------- two-level execution
+
+
+@pytest.mark.parametrize("hosts,D", [(2, 4), (4, 3), (3, 5)])
+def test_two_level_plans_execute_byte_identically(hosts, D):
+    """The two-level schedules produce the same bytes as the flat ones —
+    gather, scatter, and alltoallv through the NumPy step oracle."""
+    topo = HostTopology(hosts, D)
+    p = topo.p
+    rng = np.random.default_rng(p)
+    sizes = [int(s) for s in rng.integers(0, 40, p)]
+    root = int(rng.integers(0, p))
+    F = 2
+    blocks = [rng.integers(0, 10_000, (s, F)) for s in sizes]
+    live = [b for b in blocks if len(b)]
+    truth = (np.concatenate(live, axis=0) if live
+             else np.zeros((0, F), np.int64))
+    plan = plan_gatherv(sizes, root,
+                        tree=baselines.two_level_tree(sizes, root, D))
+    bufs = np.zeros((p, plan.buf_rows, F), np.int64)
+    for i, b in enumerate(blocks):
+        bufs[i, plan.offsets[i]: plan.offsets[i] + len(b)] = b
+    out = execute_steps_numpy(plan.steps, bufs)
+    np.testing.assert_array_equal(out[root, : plan.total], truth)
+    down = np.zeros((p, plan.buf_rows, F), np.int64)
+    down[root, : plan.total] = truth
+    sc = execute_scatter_steps_numpy(plan, down)
+    for i in range(p):
+        np.testing.assert_array_equal(
+            sc[i, plan.offsets[i]: plan.offsets[i] + sizes[i]], blocks[i])
+    S = rng.integers(0, 12, (p, p))
+    ab = [[rng.integers(0, 1000, (int(S[i, j]), F)) for j in range(p)]
+          for i in range(p)]
+    tl = alltoallv_schedule(
+        S, tree_builder=lambda row, r: baselines.two_level_tree(row, r, D))
+    got = execute_alltoallv_plan_numpy(plan_alltoallv(S, schedule=tl), ab)
+    for j in range(p):
+        want = np.concatenate([ab[i][j] for i in range(p)], axis=0)
+        np.testing.assert_array_equal(got[j], want)
+
+
+# ------------------------------------------------------ cache keying
+
+
+def test_plan_keys_for_distinct_host_topologies_never_collide():
+    """Acceptance: the same problem on 1-host, 2x4, and 4x2 substrates
+    gets three distinct cache identities (and fingerprints say why)."""
+    fps = [mesh_fingerprint(None, t)
+           for t in (None, HostTopology(2, 4), HostTopology(4, 2),
+                     HostTopology(1, 8))]
+    assert fps[0] == fps[3] == "cost-model"     # 1 host == flat identity
+    assert "hosts=2x4" in fps[1] and "hosts=4x2" in fps[2]
+    sizes = block_sizes("random", 8, 500, seed=1)
+    tokens = set()
+    for t in (None, HostTopology(2, 4), HostTopology(4, 2)):
+        svc = PlannerService(mesh=None, quantum=64, topology=t)
+        tokens.add(svc._key("gatherv", sizes, 0, "float32", 4).token())
+    assert len(tokens) == 3
+
+
+def test_two_level_plan_record_roundtrips_through_cache(tmp_path):
+    topo = HostTopology(2, 6)
+    import pickle
+
+    cache_dir = str(tmp_path / "plans")
+    S = _moe_matrix(topo.p, 256, seed=0)
+    svc1 = PlannerService(mesh=None, quantum=64, cache_dir=cache_dir,
+                          topology=topo, params=_hier(topo, 50.0, 8.0))
+    r1 = svc1.plan_record("alltoallv", S, row_bytes=4096)
+    svc2 = PlannerService(mesh=None, quantum=64, cache_dir=cache_dir,
+                          topology=topo, params=_hier(topo, 50.0, 8.0))
+    r2 = svc2.plan_record("alltoallv", S, row_bytes=4096)
+    assert (svc2.plan_hits, svc2.plan_misses) == (1, 0)
+    assert r2.algo == r1.algo
+    assert pickle.dumps(r2.plan, protocol=4) == pickle.dumps(r1.plan,
+                                                             protocol=4)
+    # a flat service over the same dir re-plans (distinct topology key)
+    svc3 = PlannerService(mesh=None, quantum=64, cache_dir=cache_dir)
+    svc3.plan_record("alltoallv", S, row_bytes=4096)
+    assert svc3.plan_misses == 1
+
+
+# ------------------------------------------------- per-axis calibration
+
+
+def test_calibrate_axes_recovers_both_link_classes():
+    machine = SyntheticHierarchicalBackend(
+        HostTopology(2, 4), alpha_ici_s=1e-6, beta_ici_s_per_byte=2e-11,
+        alpha_dcn_s=40e-6, beta_dcn_s_per_byte=3e-10, noise=0.0)
+    fits = calibrate_axes({"device": machine.axis("device"),
+                           "host": machine.axis("host")})
+    assert fits["device"].alpha_s == pytest.approx(1e-6, rel=1e-6)
+    assert fits["device"].beta_s_per_byte == pytest.approx(2e-11, rel=1e-6)
+    assert fits["host"].alpha_s == pytest.approx(40e-6, rel=1e-6)
+    assert fits["host"].beta_s_per_byte == pytest.approx(3e-10, rel=1e-6)
+    cal = HierarchicalCalibration(ici=fits["device"], dcn=fits["host"])
+    hp = cal.cost_params(machine.topology)
+    assert hp.edge(0, 1).alpha == fits["device"].alpha_s
+    assert hp.edge(0, 4).beta == fits["host"].beta_s_per_byte
+    svc = PlannerService(mesh=None, topology=machine.topology,
+                         calibration=cal)
+    assert isinstance(svc.params, HierarchicalCostParams)
+    with pytest.raises(ValueError, match="multi-host"):
+        PlannerService(mesh=None, calibration=cal)
+
+
+def test_hierarchical_backend_measure_agrees_with_model_cost():
+    topo = HostTopology(2, 4)
+    machine = SyntheticHierarchicalBackend(topo, noise=0.0)
+    cands = enumerate_candidates("gatherv", [100] * 8, 0,
+                                 machine.true_params(), view="dataplane",
+                                 topology=topo)
+    for c in cands:
+        assert machine.measure(c, row_bytes=1) == pytest.approx(
+            c.cost(machine.true_params()))
+
+
+# ------------------------------------------- checkpoint unit regression
+
+
+def test_checkpoint_consolidation_uses_canonical_ici_units():
+    """Satellite fix: ``plan_consolidation`` must price shards with the
+    canonical ``tpu_ici`` calibration converted to microseconds (the
+    manifest keys are ``*_us`` and shard sizes are bytes), not a
+    hardcoded pair with a stale unit comment."""
+    from repro.checkpoint.store import plan_consolidation
+    from repro.core.baselines import linear_tree
+
+    shard_bytes = [10_000_000, 2_000_000, 30_000_000, 500]
+    rep = plan_consolidation(shard_bytes, root=0)
+    P = CostParams.tpu_ici().to_us()
+    assert (P.time_unit, P.data_unit) == ("us", "byte")
+    tree = build_gather_tree(shard_bytes, root=0)
+    assert rep["tuw_us"] == pytest.approx(
+        simulate_gather(tree, P, include_construction=True))
+    assert rep["direct_us"] == pytest.approx(
+        simulate_gather(linear_tree(shard_bytes, 0), P))
+    assert rep["chosen"] in ("tuw", "direct")

@@ -1,0 +1,55 @@
+"""Multi-process (emulated 2-host x 4-device) conformance lane.
+
+Launches TWO copies of ``tests/multidevice/child_multihost.py`` that form
+a real ``jax.distributed`` CPU job (gloo cross-process collectives, 4
+forced host devices per process) and asserts every process reports
+byte-identity for all four collectives — flat and two-level — against
+the single-host oracle.  Slow marker: subprocesses + distributed init.
+"""
+import os
+import socket
+import subprocess
+import sys
+
+import pytest
+
+CHILD = os.path.join(os.path.dirname(__file__), "multidevice",
+                     "child_multihost.py")
+NUM_PROCESSES = 2
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+@pytest.mark.slow
+def test_multihost_conformance(child_env):
+    port = _free_port()
+    procs = [
+        subprocess.Popen(
+            [sys.executable, CHILD, str(pid), str(NUM_PROCESSES), str(port)],
+            env=child_env, stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+            text=True)
+        for pid in range(NUM_PROCESSES)
+    ]
+    outs = []
+    for p in procs:
+        try:
+            out, err = p.communicate(timeout=600)
+        except subprocess.TimeoutExpired:
+            for q in procs:
+                q.kill()
+            raise
+        outs.append((p.returncode, out, err))
+    report = "\n".join(f"--- process {i} (rc={rc})\nSTDOUT:\n{out}\n"
+                       f"STDERR:\n{err}" for i, (rc, out, err)
+                       in enumerate(outs))
+    if any("MULTIHOST-SKIP" in out for _, out, _ in outs):
+        pytest.skip("jax.distributed multi-process CPU unavailable: "
+                    + report[:500])
+    assert all(rc == 0 for rc, _, _ in outs), report
+    for i, (_, out, _) in enumerate(outs):
+        assert f"[{i}] ALL MULTIHOST CHECKS PASSED" in out, report
+        assert f"hosts={NUM_PROCESSES}x4" in out, report
