@@ -87,3 +87,24 @@ def moe_dispatch_matrix(p: int, tokens: int, shape: str,
         S[:, j] = base
         S[:rem, j] += 1
     return S
+
+
+def ragged_moe_problem(p: int, tokens: int, shape: str, seed: int = 0):
+    """(n, S) for the fwd+bwd bench: ``n[i]`` ragged per-shard token
+    counts (the same canonical load shape applied to the data-parallel
+    axis — real batches are ragged after packing/filtering) and
+    ``S[i][j]`` shard ``i``'s rows for expert ``j`` (largest-remainder
+    split of ``n[i]`` over the expert-load fractions, so every row sums
+    back to ``n[i]``).  ``uniform`` stays fully balanced on both axes."""
+    import numpy as np
+
+    ef = moe_load_fractions(p, shape, seed)
+    sf = moe_load_fractions(p, shape, seed + 1)  # decorrelated raggedness
+    n = np.maximum(1, (sf * tokens).astype(np.int64))
+    S = np.zeros((p, p), np.int64)
+    for i in range(p):
+        row = np.floor(ef * n[i]).astype(np.int64)
+        order = np.argsort(-(ef * n[i] - row))
+        row[order[: int(n[i] - row.sum())]] += 1
+        S[i] = row
+    return n, S

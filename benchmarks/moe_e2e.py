@@ -1,34 +1,44 @@
-"""End-to-end MoE train-step benchmark: dispatch → expert matmul → combine
-through ``PlannerService`` (the ROADMAP MoE throughput target).
+"""End-to-end MoE train-step benchmark: full fwd+bwd with irregular
+communication on BOTH edges — dispatch via alltoallv, combine and the
+gradient return via reduce_scatterv — all through ``PlannerService``
+(the ROADMAP MoE throughput target).
 
 Two legs, both device-free (the repo's synthetic-machine methodology,
 see ``benchmarks/pipeline_bench.py``):
 
 * **throughput study** — for (decode, prefill) x (uniform, single_hot,
-  zipf) expert-load shapes, model one forward train step:
+  zipf) load shapes, model one fwd+bwd train step on a RAGGED batch
+  (per-shard token counts follow the same load shape):
 
-      t_step = t_dispatch + t_compute + t_reorder + t_combine
+      t_step = t_dispatch + t_combine        (fwd comm)
+             + t_grad_in + t_grad_out        (bwd comm)
+             + t_compute + t_reorder
 
-  where the dispatch/combine alltoallv plans are SELECTED by a
-  ``PlannerService`` (per-tree pipelining, payload-binned waves, direct
-  pairwise — whatever wins under the calibrated α-β) and timed on a
-  deterministic synthetic true machine; compute is the per-device
-  critical expert's einsum FLOPs at ``PEAK_FLOPS``; reorder is the
-  pack/unpack HBM traffic.  The BASELINE is the regular padded
-  all-to-all: every block padded to the global max, lowered through the
-  exact same machinery (direct pairwise schedule, monolithic), plus the
-  same-capacity compute.  The ROADMAP target is asserted in report form:
-  **>= 90% of the regular all-to-all baseline at uniform loads, winning
-  at skewed loads**.
+  Forward: dispatch alltoallv ``S``, expert matmul, combine via
+  ``reduce_scatterv(n)`` — each expert's gated contributions flow back
+  and are SUMMED en route (top-k combine is a sum, so the combine edge
+  is a reduction, not a permutation).  Backward: ``allgatherv(n)``
+  makes the output gradient visible to every expert, the summed input
+  gradient returns via a second ``reduce_scatterv(n)``, and dW is
+  local.  All four plans are SELECTED by a ``PlannerService`` and timed
+  on a deterministic synthetic true machine; compute is 3x the forward
+  einsum FLOPs (dX + dW matmuls) on the critical expert; reorder is 4
+  pack/unpack HBM passes.  The BASELINE is the regular padded
+  collectives: padded direct all-to-all, padded recursive-halving
+  reduce-scatter, padded all-gather (what XLA emits on equal blocks),
+  plus same-capacity compute.  The ROADMAP target is asserted in report
+  form: **>= 90% of the padded baseline at uniform loads, winning at
+  skewed loads**.
 
-* **numeric end-to-end leg** — a small (p=8) routed batch REALLY flows
-  through the selected plans: dispatch steps run in the NumPy step
-  oracle (``repro.core.pipeline.execute_steps_numpy``), each expert
-  applies its matmul, the combine alltoallv returns expert outputs to
-  their source shards, and ``ragged_scatter`` (interpret-mode Pallas)
-  unpermutes rows back into token order.  The result must match the
-  direct per-token computation exactly — the fast path is not allowed to
-  trade correctness for speed.
+* **numeric end-to-end leg** — a small (p=8) ragged top-2-routed batch
+  REALLY flows fwd+bwd through the selected plans in the NumPy oracles
+  (``execute_alltoallv_plan_numpy``, ``execute_steps_numpy``,
+  ``execute_reduce_scatterv_plan_numpy``): expert outputs are gated and
+  summed by the combine reduce_scatterv, the backward pass gathers dy,
+  returns dX through a reduce_scatterv, and computes dW locally.  The
+  outputs y, the input gradients dX, and the weight gradients dW must
+  all match the dense per-token reference — the fast path is not
+  allowed to trade correctness for speed.
 
 Writes ``results/moe_e2e.json`` (schema: EXPERIMENTS.md §MoE e2e):
 
@@ -48,9 +58,9 @@ if __package__ in (None, ""):  # direct-script execution
     for _p in (_REPO, os.path.join(_REPO, "src")):
         if _p not in sys.path:
             sys.path.insert(0, _p)
-    from benchmarks.common import emit, moe_dispatch_matrix
+    from benchmarks.common import emit, ragged_moe_problem
 else:
-    from .common import emit, moe_dispatch_matrix
+    from .common import emit, ragged_moe_problem
 
 from repro.core.costmodel import CostParams
 from repro.tuner import (Candidate, PlannerService, SyntheticTimingBackend,
@@ -65,8 +75,8 @@ D_FF = 8_192
 ROW_BYTES = D_MODEL * 2      # bf16 activations
 PEAK_FLOPS = 2.0e14          # per-device bf16 peak (flops/s)
 HBM_BW = 8.0e11              # bytes/s for the pack/unpack reorder passes
-FLOPS_PER_ROW = 3 * 2 * D_MODEL * D_FF   # wi, wg, wo einsums
-UNIFORM_TARGET = 0.90        # ROADMAP: >= 90% of regular all-to-all
+FLOPS_PER_ROW = 3 * 2 * D_MODEL * D_FF   # wi, wg, wo einsums (forward)
+UNIFORM_TARGET = 0.90        # ROADMAP: >= 90% of regular padded comm
 
 
 def measure_plan(plan, machine: SyntheticTimingBackend,
@@ -84,48 +94,78 @@ def measure_plan(plan, machine: SyntheticTimingBackend,
 
 
 def step_times(svc: PlannerService, machine: SyntheticTimingBackend,
-               S: np.ndarray) -> dict:
-    """One forward MoE step through the service-selected plans."""
+               n: np.ndarray, S: np.ndarray) -> dict:
+    """One fwd+bwd MoE step through the service-selected plans.
+
+    Comm edges: dispatch ``alltoallv(S)``; combine ``reduce_scatterv(n)``
+    (gated expert outputs summed per token); bwd ``allgatherv(n)`` of the
+    output gradient + ``reduce_scatterv(n)`` returning the summed input
+    gradient (dW needs no comm under expert parallelism)."""
+    sizes = [int(v) for v in n]
     disp = svc.plan_record("alltoallv", S, row_bytes=ROW_BYTES)
-    comb = svc.plan_record("alltoallv", S.T.copy(), row_bytes=ROW_BYTES)
+    comb = svc.plan_record("reduce_scatterv", sizes, row_bytes=ROW_BYTES)
+    agrad = svc.plan_record("allgatherv", sizes, row_bytes=ROW_BYTES)
     rows_critical = int(S.sum(axis=0).max())   # busiest expert's tokens
     total_rows = int(S.sum())
     t_dispatch = measure_plan(disp.plan, machine, ROW_BYTES)
     t_combine = measure_plan(comb.plan, machine, ROW_BYTES)
-    t_compute = rows_critical * FLOPS_PER_ROW / PEAK_FLOPS
-    # pack before dispatch + unpack after combine: 2 HBM passes over the
-    # critical device's rows (ragged_gather / ragged_scatter kernels)
-    t_reorder = 2 * rows_critical * ROW_BYTES / HBM_BW
+    t_grad_in = measure_plan(agrad.plan, machine, ROW_BYTES)
+    t_grad_out = measure_plan(comb.plan, machine, ROW_BYTES)
+    # fwd einsums + the two backward matmuls (dX, dW) on the critical
+    # expert: 3x the forward FLOPs
+    t_compute = 3 * rows_critical * FLOPS_PER_ROW / PEAK_FLOPS
+    # pack/unpack HBM passes: fwd (pack dispatch, unpack combine) + bwd
+    # (pack grads, unpack dX) over the critical device's rows
+    t_reorder = 4 * rows_critical * ROW_BYTES / HBM_BW
+    t_comm = t_dispatch + t_combine + t_grad_in + t_grad_out
     return {
         "dispatch_algo": disp.algo, "combine_algo": comb.algo,
+        "grad_gather_algo": agrad.algo,
         "segments": disp.plan.segments,
         "padding_overhead": disp.plan.padding_overhead,
         "t_dispatch_s": t_dispatch, "t_combine_s": t_combine,
+        "t_grad_in_s": t_grad_in, "t_grad_out_s": t_grad_out,
+        "t_comm_s": t_comm,
         "t_compute_s": t_compute, "t_reorder_s": t_reorder,
-        "t_step_s": t_dispatch + t_compute + t_reorder + t_combine,
+        "t_step_s": t_comm + t_compute + t_reorder,
         "rows_critical": rows_critical, "total_rows": total_rows,
     }
 
 
-def baseline_times(machine: SyntheticTimingBackend, S: np.ndarray) -> dict:
-    """Regular padded all-to-all: every block inflated to the global max,
-    run as the monolithic direct pairwise exchange (what XLA's AllToAll
-    does on equal blocks), same-capacity expert compute."""
-    from repro.core.composed import alltoallv_direct_schedule
-    from repro.core.jax_collectives import plan_alltoallv
+def baseline_times(machine: SyntheticTimingBackend, n: np.ndarray,
+                   S: np.ndarray) -> dict:
+    """Regular padded collectives: every block inflated to the global
+    max, lowered through the exact same machinery — monolithic direct
+    pairwise all-to-all, recursive-halving reduce-scatter, tree
+    all-gather (what XLA emits on equal blocks) — plus same-capacity
+    expert compute."""
+    from repro.core.composed import (alltoallv_direct_schedule,
+                                     reduce_scatterv_halving_schedule)
+    from repro.core.jax_collectives import (plan_allgatherv, plan_alltoallv,
+                                            plan_reduce_scatterv)
 
     p = S.shape[0]
     pad = np.full((p, p), int(S.max()), np.int64)
-    plan = plan_alltoallv(pad, validate=False,
-                          schedule=alltoallv_direct_schedule(pad))
-    t_a2a = measure_plan(plan, machine, ROW_BYTES)
+    pad_n = [int(n.max())] * p
+    a2a = plan_alltoallv(pad, validate=False,
+                         schedule=alltoallv_direct_schedule(pad))
+    rs = plan_reduce_scatterv(pad_n, validate=False,
+                              schedule=reduce_scatterv_halving_schedule(
+                                  pad_n))
+    ag = plan_allgatherv(pad_n, validate=False)
+    t_a2a = measure_plan(a2a, machine, ROW_BYTES)
+    t_rs = measure_plan(rs, machine, ROW_BYTES)
+    t_ag = measure_plan(ag, machine, ROW_BYTES)
     rows_cap = int(pad.sum(axis=0).max())     # p * max block
-    t_compute = rows_cap * FLOPS_PER_ROW / PEAK_FLOPS
-    t_reorder = 2 * rows_cap * ROW_BYTES / HBM_BW
+    t_compute = 3 * rows_cap * FLOPS_PER_ROW / PEAK_FLOPS
+    t_reorder = 4 * rows_cap * ROW_BYTES / HBM_BW
+    t_comm = t_a2a + 2 * t_rs + t_ag
     return {
-        "t_dispatch_s": t_a2a, "t_combine_s": t_a2a,
+        "t_dispatch_s": t_a2a, "t_combine_s": t_rs,
+        "t_grad_in_s": t_ag, "t_grad_out_s": t_rs,
+        "t_comm_s": t_comm,
         "t_compute_s": t_compute, "t_reorder_s": t_reorder,
-        "t_step_s": 2 * t_a2a + t_compute + t_reorder,
+        "t_step_s": t_comm + t_compute + t_reorder,
         "rows_critical": rows_cap,
     }
 
@@ -135,94 +175,139 @@ def throughput_study(svc: PlannerService, machine: SyntheticTimingBackend,
     out = []
     for regime, tokens in (("decode", 4_096), ("prefill", 65_536)):
         for shape in ("uniform", "single_hot", "zipf"):
-            S = moe_dispatch_matrix(P, tokens, shape)
-            fast = step_times(svc, machine, S)
-            base = baseline_times(machine, S)
+            n, S = ragged_moe_problem(P, tokens, shape)
+            fast = step_times(svc, machine, n, S)
+            base = baseline_times(machine, n, S)
             tput = fast["total_rows"] / fast["t_step_s"]
             base_tput = fast["total_rows"] / base["t_step_s"]
             ratio = tput / base_tput
-            comm_fast = fast["t_dispatch_s"] + fast["t_combine_s"]
-            comm_base = base["t_dispatch_s"] + base["t_combine_s"]
             rec = {
                 "regime": f"{regime}_{shape}", "tokens": tokens,
                 "shape": shape, **fast,
                 "baseline": base,
                 "tokens_per_s": tput, "baseline_tokens_per_s": base_tput,
                 "tput_vs_baseline": ratio,
-                "comm_vs_baseline": comm_base / comm_fast,
+                "comm_vs_baseline": base["t_comm_s"] / fast["t_comm_s"],
             }
             out.append(rec)
             rows.append((
                 f"moe_e2e/{regime}_{shape}", fast["t_step_s"] * 1e6,
                 f"tput_vs_baseline={ratio:.2f}x;"
-                f"comm_speedup={comm_base / comm_fast:.2f}x;"
+                f"comm_speedup={base['t_comm_s'] / fast['t_comm_s']:.2f}x;"
                 f"dispatch={fast['dispatch_algo']};"
+                f"combine={fast['combine_algo']};"
                 f"S={fast['segments']}"))
     return out
 
 
 # --------------------------------------------------------------------------
-# numeric end-to-end leg: data really flows through the selected plans
+# numeric end-to-end leg: a fwd+bwd step really flows through the plans
 # --------------------------------------------------------------------------
 
-def numeric_e2e(seed: int = 0, p: int = 8, tokens_per_shard: int = 24,
-                d: int = 16) -> dict:
-    """Route a real batch through dispatch → expert matmul → combine using
-    the service-selected plans and the NumPy step oracle; the final
-    token-order unpermute runs through the ``ragged_scatter`` kernel
-    (interpret mode).  Must equal the direct per-token computation."""
-    import jax.numpy as jnp
-
-    from repro.core.pipeline import execute_alltoallv_plan_numpy
-    from repro.kernels.ragged_gather.ops import ragged_scatter
+def numeric_e2e(seed: int = 0, p: int = 8, d: int = 16) -> dict:
+    """Route a ragged top-2 batch fwd+bwd through the service-selected
+    plans in the NumPy oracles.  Outputs y, input gradients dX, and
+    weight gradients dW must all match the dense per-token reference."""
+    from repro.core.pipeline import (execute_alltoallv_plan_numpy,
+                                     execute_reduce_scatterv_plan_numpy,
+                                     execute_steps_numpy)
 
     rng = np.random.default_rng(seed)
     svc = PlannerService(quantum=1)
-    x = rng.standard_normal((p, tokens_per_shard, d)).astype(np.float32)
-    expert = rng.integers(0, p, (p, tokens_per_shard))   # router choice
+    n = rng.integers(8, 24, p)                    # ragged token counts
+    offs = np.concatenate([[0], np.cumsum(n)])
+    total = int(n.sum())
+    x = [rng.standard_normal((int(n[i]), d)).astype(np.float32)
+         for i in range(p)]
+    dy = [rng.standard_normal((int(n[i]), d)).astype(np.float32)
+          for i in range(p)]
     W = rng.standard_normal((p, d, d)).astype(np.float32)
 
-    S = np.zeros((p, p), np.int64)
+    # top-2 routing: two DISTINCT experts + softmax gates per token — the
+    # combine edge genuinely sums, so a pure-permutation fast path can't
+    # fake it
+    experts = [np.stack([rng.choice(p, 2, replace=False)
+                         for _ in range(int(n[i]))]) for i in range(p)]
+    gates = []
     for i in range(p):
-        for j in range(p):
-            S[i, j] = int((expert[i] == j).sum())
+        g = np.exp(rng.standard_normal((int(n[i]), 2)).astype(np.float32))
+        gates.append(g / g.sum(axis=1, keepdims=True))
 
-    # dispatch: shard i's tokens for expert j, in token order
-    order = [[np.nonzero(expert[i] == j)[0] for j in range(p)]
-             for i in range(p)]
-    blocks = [[x[i][order[i][j]] for j in range(p)] for i in range(p)]
+    # (token, slot) assignments per (source shard, expert), token order
+    assign = [[[(t, s) for t in range(int(n[i])) for s in range(2)
+                if experts[i][t, s] == j] for j in range(p)]
+              for i in range(p)]
+    S = np.array([[len(assign[i][j]) for j in range(p)] for i in range(p)],
+                 np.int64)
+
+    # ---- forward: dispatch alltoallv, expert matmul, combine rs(n) ----
+    blocks = [[x[i][[t for t, _ in assign[i][j]]] for j in range(p)]
+              for i in range(p)]
     disp = svc.plan_record("alltoallv", S, row_bytes=d * 4)
     received = execute_alltoallv_plan_numpy(disp.plan, blocks)
-
-    # expert matmul on each device's received rows
     y = [received[j] @ W[j] for j in range(p)]
 
-    # combine: expert j returns each source shard's slice (transpose S)
-    comb_blocks = [[None] * p for _ in range(p)]
-    for j in range(p):
-        off = 0
-        for i in range(p):
-            comb_blocks[j][i] = y[j][off: off + S[i, j]]
-            off += S[i, j]
-    comb = svc.plan_record("alltoallv", S.T.copy(), row_bytes=d * 4)
-    returned = execute_alltoallv_plan_numpy(comb.plan, comb_blocks)
+    # expert j's received rows, in order = concat_i assign[i][j]
+    meta = [[(i, t, s) for i in range(p) for (t, s) in assign[i][j]]
+            for j in range(p)]
+    gate_col = [np.array([gates[i][t, s] for i, t, s in meta[j]],
+                         np.float32) for j in range(p)]
 
-    # unpermute back to token order with the ragged_scatter kernel: shard
-    # i's returned rows are ordered by (expert, token); scatter row k to
-    # its original token slot
-    max_err = 0.0
+    # each expert's gated contribution over the FLAT token space; the
+    # combine reduce_scatterv sums the top-2 partial outputs per token
+    # and lands segment i on its source shard
+    C = [np.zeros((total, d), np.float32) for _ in range(p)]
+    for j in range(p):
+        for k, (i, t, _s) in enumerate(meta[j]):
+            C[j][offs[i] + t] += gate_col[j][k] * y[j][k]
+    sizes = [int(v) for v in n]
+    comb = svc.plan_record("reduce_scatterv", sizes, row_bytes=d * 4)
+    got_y = execute_reduce_scatterv_plan_numpy(comb.plan, C)
+
+    # ---- backward: allgatherv(dy), dX via rs(n), local dW ----
+    agrad = svc.plan_record("allgatherv", sizes, row_bytes=d * 4)
+    agp = agrad.plan
+    bufs = np.zeros((p, agp.buf_rows, d), np.float32)
     for i in range(p):
-        idx = np.concatenate([order[i][j] for j in range(p)])
-        got = np.asarray(ragged_scatter(
-            jnp.asarray(returned[i]), jnp.asarray(idx, jnp.int32),
-            tokens_per_shard, interpret=True))
-        want = np.stack([x[i][t] @ W[expert[i][t]]
-                         for t in range(tokens_per_shard)])
-        max_err = max(max_err, float(np.abs(got - want).max()))
+        bufs[i, agp.in_starts[i]: agp.in_starts[i] + int(n[i])] = dy[i]
+    dy_full = execute_steps_numpy(agp.steps, bufs)[:, :agp.total]
+    # quantum=1: plan offsets == true offsets, so token (i, t)'s output
+    # gradient sits at flat row offs[i] + t on every device
+    dy_rows = [np.stack([dy_full[j][offs[i] + t] for i, t, _s in meta[j]])
+               if meta[j] else np.zeros((0, d), np.float32)
+               for j in range(p)]
+
+    D = [np.zeros((total, d), np.float32) for _ in range(p)]
+    for j in range(p):
+        dxj = dy_rows[j] @ W[j].T                  # d(x_row) per assignment
+        for k, (i, t, _s) in enumerate(meta[j]):
+            D[j][offs[i] + t] += gate_col[j][k] * dxj[k]
+    got_dx = execute_reduce_scatterv_plan_numpy(comb.plan, D)
+
+    got_dw = [received[j].T @ (gate_col[j][:, None] * dy_rows[j])
+              if meta[j] else np.zeros((d, d), np.float32)
+              for j in range(p)]
+
+    # ---- dense per-token reference ----
+    max_err = 0.0
+    want_dw = [np.zeros((d, d), np.float32) for _ in range(p)]
+    for i in range(p):
+        want_y = np.zeros((int(n[i]), d), np.float32)
+        want_dx = np.zeros((int(n[i]), d), np.float32)
+        for t in range(int(n[i])):
+            for s in range(2):
+                j, g = int(experts[i][t, s]), gates[i][t, s]
+                want_y[t] += g * (x[i][t] @ W[j])
+                want_dx[t] += g * (dy[i][t] @ W[j].T)
+                want_dw[j] += g * np.outer(x[i][t], dy[i][t])
+        max_err = max(max_err, float(np.abs(got_y[i] - want_y).max()),
+                      float(np.abs(got_dx[i] - want_dx).max()))
+    for j in range(p):
+        max_err = max(max_err, float(np.abs(got_dw[j] - want_dw[j]).max()))
     assert max_err < 1e-4, max_err
-    return {"p": p, "tokens_per_shard": tokens_per_shard, "d_model": d,
+    return {"p": p, "tokens": total, "d_model": d, "top_k": 2,
             "dispatch_algo": disp.algo, "combine_algo": comb.algo,
-            "max_abs_err": max_err}
+            "grad_gather_algo": agrad.algo, "max_abs_err": max_err}
 
 
 def run(emit_rows: bool = True, out_path: str | None = None):
@@ -230,8 +315,8 @@ def run(emit_rows: bool = True, out_path: str | None = None):
     machine = SyntheticTimingBackend(alpha_s=2e-6, beta_s_per_byte=2.5e-11,
                                      noise=0.03, seed=11)
     # quantum=16 keeps decode-sized blocks (16 rows/pair) exact; the
-    # regular-alltoall baseline needs no quantization, so a coarse
-    # quantum would charge the fast path a pure bucketing tax here
+    # regular padded baseline needs no quantization, so a coarse quantum
+    # would charge the fast path a pure bucketing tax here
     svc = PlannerService(quantum=16, params=assumed)
     rows: list = []
     regimes = throughput_study(svc, machine, rows)
@@ -247,9 +332,10 @@ def run(emit_rows: bool = True, out_path: str | None = None):
     numeric = numeric_e2e()
     rows.append(("moe_e2e/numeric_leg", numeric["max_abs_err"],
                  f"dispatch={numeric['dispatch_algo']};"
-                 f"combine={numeric['combine_algo']};exact_roundtrip=True"))
+                 f"combine={numeric['combine_algo']};"
+                 f"top_k={numeric['top_k']};fwd_bwd_exact=True"))
     payload = {
-        "version": 1,
+        "version": 2,              # v2: fwd+bwd with reduction collectives
         "assumed_params": {"alpha": assumed.alpha, "beta": assumed.beta,
                            "time_unit": assumed.time_unit,
                            "data_unit": assumed.data_unit},
@@ -259,7 +345,7 @@ def run(emit_rows: bool = True, out_path: str | None = None):
                          "backend": machine.fingerprint()},
         "config": {"p": P, "d_model": D_MODEL, "d_ff": D_FF,
                    "row_bytes": ROW_BYTES, "peak_flops": PEAK_FLOPS,
-                   "hbm_bw": HBM_BW},
+                   "hbm_bw": HBM_BW, "train_step": "fwd+bwd"},
         "regimes": regimes,
         "numeric_e2e": numeric,
         "targets": {"uniform_ratio_target": UNIFORM_TARGET,

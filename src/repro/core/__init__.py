@@ -20,9 +20,13 @@ from .costmodel import (  # noqa: F401
 )
 from .composed import (  # noqa: F401
     ComposedSchedule, Transfer, allgatherv_schedule, alltoallv_schedule,
-    independent_scatter_bytes,
+    independent_scatter_bytes, reduce_scatterv_direct_schedule,
+    reduce_scatterv_halving_schedule, reduce_scatterv_schedule,
+    simulate_reduce_dataflow,
 )
 from .pipeline import (  # noqa: F401
-    execute_steps_numpy, pipeline_rounds, segment_bounds,
+    execute_allreducev_plan_numpy, execute_reduce_scatterv_plan_numpy,
+    execute_reduce_steps_numpy, execute_steps_numpy, pipeline_rounds,
+    segment_bounds,
 )
 from . import baselines, distributions, guidelines  # noqa: F401

@@ -18,6 +18,22 @@ round-synchronous schedules that the JAX layer lowers 1:1 to
   sources and unique destinations — i.e. every global round is a partial
   permutation, directly expressible as one ``ppermute``.
 
+* **reduce_scatterv** — the REDUCTION member of the family (Träff,
+  arXiv 2410.14234; NVIDIA PAT aggregated trees, arXiv 2506.20252): every
+  rank contributes a full ``sum(m)``-row vector; rank ``j`` ends with the
+  elementwise SUM of segment ``j`` (``m[j]`` rows).  The schedule is one
+  reduction tree per owned segment — the scatter route of
+  ``build_gather_tree`` run in REVERSE (contributions flow root-ward,
+  summed en route) — packed round-robin into partial-permutation rounds
+  exactly like alltoallv.  The per-tree round order of ``GatherTree``
+  (``validate``: a parent forwards only after receiving) doubles as the
+  reduction-dependency order, and because the whole schedule is a
+  deterministic function of ``m`` the fold order at every accumulator is
+  fixed — results are bitwise reproducible run-to-run.
+  ``simulate_reduce_dataflow`` checks the no-double-count /
+  full-coverage invariants the way ``simulate_dataflow`` checks
+  availability for the byte-moving ops.
+
 Both schedules inherit the paper's ordering invariant: every transfer
 carries a consecutive block-rank range and is written at the *same* flat
 row offset it was read from (zero-copy receives, no reordering pass).
@@ -61,7 +77,7 @@ class ComposedSchedule:
     tree (p rows for alltoallv, 1 for allgatherv).
     """
 
-    kind: str                      # "allgatherv" | "alltoallv"
+    kind: str                      # "allgatherv" | "alltoallv" | "reduce_scatterv"
     p: int
     root: int                      # allgatherv gather root; -1 for alltoallv
     sizes: np.ndarray              # (ntrees, p) block sizes
@@ -120,6 +136,10 @@ class ComposedSchedule:
         has not yet received (dependency violation) — receives within a
         round see sender state from the round start (ppermute semantics).
         """
+        if self.kind == "reduce_scatterv":
+            raise ValueError("reduction schedules track accumulator coverage, "
+                             "not block availability: use "
+                             "simulate_reduce_dataflow")
         cov: dict[tuple[int, int], set[int]] = {}
         if self.kind == "allgatherv":
             for i in range(self.p):
@@ -368,6 +388,190 @@ def alltoallv_direct_schedule(size_matrix) -> ComposedSchedule:
         if rnd:
             sched.rounds.append(rnd)
     return sched
+
+
+# --------------------------------------------------------------------------
+# reduction schedules: reduce_scatterv
+# --------------------------------------------------------------------------
+
+def _reduce_sched(m) -> tuple[ComposedSchedule, np.ndarray]:
+    m = [int(x) for x in m]
+    if any(x < 0 for x in m):
+        raise ValueError("segment sizes must be non-negative")
+    sched = ComposedSchedule("reduce_scatterv", len(m), -1,
+                             np.asarray([m], np.int64), np.zeros(1, np.int64))
+    return sched, sched.offsets(0)
+
+
+def reduce_scatterv_schedule(m) -> ComposedSchedule:
+    """reduce_scatterv = one reduction tree per owned segment, packed.
+
+    Segment ``j`` (``m[j]`` rows at its global offset, owned by rank
+    ``j``) gets the TUW tree ``build_gather_tree([1]*p, root=j)`` — equal
+    unit blocks, because every rank's CONTRIBUTION to segment ``j`` is the
+    same ``m[j]`` rows; the tree supplies only the merge topology and the
+    round order — run root-ward: each edge ``child -> parent`` carries the
+    child's accumulated partial sum of the whole segment (``m[j]`` rows at
+    offset ``offsets[j]``), and the parent folds it into its own
+    accumulator.  ``GatherTree.validate``'s round invariant (a parent's
+    own send round is strictly later than all its receive rounds) is
+    exactly the reduction dependency order, so no partial sum is ever
+    forwarded before its inputs arrived and no contribution is counted
+    twice.  The per-segment trees' rounds are packed greedily round-robin
+    into global partial-permutation rounds — the same scheduler as
+    :func:`alltoallv_schedule`, with send/receive roles reversed
+    (reduction: the CHILD sends).
+
+    The schedule is a deterministic function of ``m`` alone, and every
+    accumulator folds its inputs in fixed (round-ordered) sequence —
+    results are bitwise reproducible run-to-run.  Zero-size segments need
+    no tree at all and ``p == 1`` needs no rounds (satellite-hardened
+    degenerate shapes).
+    """
+    sched, offs = _reduce_sched(m)
+    m = [int(x) for x in sched.sizes[0]]
+    p = sched.p
+    active = [j for j in range(p) if m[j] > 0]
+    if p == 1 or not active:
+        return sched
+    # one topology for every segment modulo root: unit blocks make the
+    # tree a pure merge order, deterministic per (p, root)
+    tree_rounds = {
+        j: _tree_rounds(build_gather_tree([1] * p, root=j))
+        for j in active
+    }
+    nxt = {j: 0 for j in active}
+    g = 0
+    while any(nxt[j] < len(tree_rounds[j]) for j in active):
+        used_src: set[int] = set()
+        used_dst: set[int] = set()
+        cur: list[Transfer] = []
+        for k in range(len(active)):
+            j = active[(g + k) % len(active)]
+            i = nxt[j]
+            if i >= len(tree_rounds[j]):
+                continue
+            edges = tree_rounds[j][i]
+            srcs = {e.child for e in edges}    # reduction: child sends up
+            dsts = {e.parent for e in edges}
+            if (srcs & used_src) or (dsts & used_dst):
+                continue  # conflicts with this global round; retry next one
+            used_src |= srcs
+            used_dst |= dsts
+            cur.extend(
+                Transfer(e.child, e.parent, m[j], int(offs[j]), 0, j, j)
+                for e in edges
+            )
+            nxt[j] += 1
+        # progress guarantee: the first eligible tree always fits an empty
+        # round, so cur is never empty here
+        sched.rounds.append(cur)
+        g += 1
+    return sched
+
+
+def reduce_scatterv_direct_schedule(m) -> ComposedSchedule:
+    """reduce_scatterv as ``p - 1`` direct pairwise rounds (no forwarding).
+
+    Round ``k``: rank ``i`` sends its ORIGINAL contribution for segment
+    ``(i + k) mod p`` straight to that owner, who folds it in.  Exact
+    bytes ``(p - 1) * sum(m)`` spread evenly, ``p - 1`` startups — the
+    β-dominated large-message baseline the packed trees must beat (the
+    reduction analogue of :func:`alltoallv_direct_schedule`).  Each owner
+    accumulates in round order, so the fold sequence is again fixed.
+    """
+    sched, offs = _reduce_sched(m)
+    m = [int(x) for x in sched.sizes[0]]
+    p = sched.p
+    for k in range(1, p):
+        rnd = []
+        for i in range(p):
+            j = (i + k) % p
+            if m[j] > 0:
+                rnd.append(Transfer(i, j, m[j], int(offs[j]), 0, j, j))
+        if rnd:
+            sched.rounds.append(rnd)
+    return sched
+
+
+def reduce_scatterv_halving_schedule(m) -> ComposedSchedule:
+    """Träff-style non-pipelined recursive halving (``p = 2^k`` only).
+
+    Round ``t`` pairs every rank with its partner at distance ``p/2^{t+1}``
+    inside its current group; each side sends its accumulated partial sums
+    for the CONSECUTIVE segment half the partner keeps, so after ``log2 p``
+    rounds rank ``j`` holds the full sum of exactly segment ``j``.
+    Per-rank bytes ``~ sum(m) * (p-1)/p`` in ``log2 p`` startups — the
+    classic bandwidth-optimal non-pipelined reduce-scatter.  Transfers
+    carry multi-segment ranges, so the lowering pipelines this schedule by
+    GLOBAL row chunks (the per-segment transform needs span-contained
+    transfers).
+    """
+    sched, offs = _reduce_sched(m)
+    m = [int(x) for x in sched.sizes[0]]
+    p = sched.p
+    if p & (p - 1):
+        raise ValueError("recursive halving needs p = 2^k; use "
+                         "reduce_scatterv_schedule for general p")
+    pref = np.concatenate([[0], np.cumsum(m)]).astype(np.int64)
+    t = 0
+    while (1 << t) < p:
+        w = p >> t          # current group width
+        h = w >> 1          # partner distance
+        rnd = []
+        for i in range(p):
+            base = (i // w) * w
+            partner = i ^ h
+            if i < partner:     # i keeps the lower half, sends the upper
+                lo, hi = base + h, base + w - 1
+            else:               # i keeps the upper half, sends the lower
+                lo, hi = base, base + h - 1
+            size = int(pref[hi + 1] - pref[lo])
+            if size > 0:
+                rnd.append(Transfer(i, partner, size, int(offs[lo]),
+                                    0, lo, hi))
+        if rnd:
+            sched.rounds.append(rnd)
+        t += 1
+    return sched
+
+
+def simulate_reduce_dataflow(sched: ComposedSchedule
+                             ) -> dict[tuple[int, int], set[int]]:
+    """Execute a reduction schedule symbolically; verify sum correctness.
+
+    Tracks ``(device, segment) -> set of source ranks`` whose contribution
+    for that segment has been folded into the device's accumulator
+    (receives within a round see sender state from the round start —
+    ppermute semantics).  Raises AssertionError if any transfer would fold
+    a contribution into an accumulator that already contains it (double
+    count), or if any owner ends without all ``p`` contributions
+    (under-count).  Returns the final coverage.
+    """
+    assert sched.kind == "reduce_scatterv", sched.kind
+    p = sched.p
+    m = sched.sizes[0]
+    cov = {(i, j): {i} for i in range(p) for j in range(p) if m[j] > 0}
+    for rnd in sched.rounds:
+        adds = []
+        for t in rnd:
+            for j in range(t.lo, t.hi + 1):
+                if m[j] == 0:
+                    continue
+                sent = set(cov[(t.src, j)])
+                dup = sent & cov[(t.dst, j)]
+                assert not dup, (
+                    f"transfer {t} folds contributions {dup} for segment "
+                    f"{j} into rank {t.dst} twice (double count)")
+                adds.append(((t.dst, j), sent))
+        for key, sent in adds:
+            cov[key].update(sent)
+    for j in range(p):
+        if m[j] > 0:
+            assert cov[(j, j)] == set(range(p)), (
+                f"owner {j} is missing contributions "
+                f"{set(range(p)) - cov[(j, j)]}")
+    return cov
 
 
 def independent_scatter_bytes(size_matrix) -> int:

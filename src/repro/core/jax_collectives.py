@@ -37,6 +37,17 @@ TPU adaptation of the paper's point-to-point schedules (DESIGN.md §2):
   concatenates the per-tree coordinate spaces.  ``ComposedPlan`` carries
   the tables and is validated at build time.
 
+* **reduction mode** — ``reduce_scatterv`` runs the composed reduction
+  schedules (``repro.core.composed.reduce_scatterv_schedule`` and its
+  direct / recursive-halving alternatives) through the SAME lowering and
+  executor, with one semantic change: ``_apply_steps(..., reduce=True)``
+  swaps the receive-side merge for a fused ADD (``slab_step_reduce``),
+  so partial sums fold root-ward instead of blocks overwriting.
+  ``allreducev`` chains a reduce_scatterv plan with an allgatherv plan
+  on one buffer (the post-reduce state IS the allgatherv start state).
+  Fold order per row is fixed by the step tables — results are bitwise
+  reproducible run-to-run and across pipelining choices.
+
 * **pipelined mode** (``segments > 1`` on any plan_*) — the same
   schedule re-timed by ``repro.core.pipeline``: the flat row space is
   cut into S global chunks and the chunk-j piece of a round-k transfer
@@ -84,7 +95,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.compat import shard_map  # noqa: F401  (re-exported for callers)
 from repro.compat import shard_map_unchecked
 
-from .composed import ComposedSchedule, allgatherv_schedule, alltoallv_schedule
+from .composed import (ComposedSchedule, allgatherv_schedule,
+                       alltoallv_schedule, reduce_scatterv_schedule)
 from .pipeline import num_stages as _pipeline_num_stages
 from .pipeline import pipeline_rounds, pipeline_rounds_per_tree
 from .treegather import GatherTree, build_gather_tree, ceil_log2
@@ -332,23 +344,37 @@ def plan_gatherv(sizes, root: int, tree: GatherTree | None = None,
 # SPMD executors (call inside shard_map)
 # --------------------------------------------------------------------------
 
-def _slab_ops():
+def _slab_ops(reduce: bool = False):
     """(extract, merge, step) triple: Pallas kernels on TPU, the jnp
     oracles from ``repro.kernels.ragged_gather.ref`` elsewhere — one
     definition of the slab semantics per backend (see
     ``use_pallas_dataplane``).  ``step`` is the FUSED merge-then-extract
-    kernel the executors run between consecutive ppermutes."""
+    kernel the executors run between consecutive ppermutes.
+    ``reduce=True`` swaps in the fused-ADD variants (``slab_merge_add`` /
+    ``slab_step_reduce``): received slabs fold into the accumulator
+    instead of overwriting it — the only semantic difference between the
+    byte-moving and the reducing data planes."""
     if _pallas_slabs_enabled():
         from repro.kernels.ragged_gather.ops import (slab_extract,
-                                                     slab_merge, slab_step)
+                                                     slab_merge,
+                                                     slab_merge_add,
+                                                     slab_step,
+                                                     slab_step_reduce)
+        if reduce:
+            return slab_extract, slab_merge_add, slab_step_reduce
         return slab_extract, slab_merge, slab_step
     from repro.kernels.ragged_gather.ref import (slab_extract_ref,
+                                                 slab_merge_add_ref,
                                                  slab_merge_ref,
+                                                 slab_step_reduce_ref,
                                                  slab_step_ref)
+    if reduce:
+        return slab_extract_ref, slab_merge_add_ref, slab_step_reduce_ref
     return slab_extract_ref, slab_merge_ref, slab_step_ref
 
 
-def _apply_steps(buf: jax.Array, steps, r, axis_name: str) -> jax.Array:
+def _apply_steps(buf: jax.Array, steps, r, axis_name: str,
+                 reduce: bool = False) -> jax.Array:
     """Run ppermute step tables over a flat row buffer (shared by the
     gatherv, scatterv, and composed executors).  Each step: extract the
     ``payload``-row slab at the device's send offset, permute ONLY that
@@ -364,10 +390,15 @@ def _apply_steps(buf: jax.Array, steps, r, axis_name: str) -> jax.Array:
     3-local-passes-per-step pipeline (extract / permute / merge) into a
     leading extract, one fused local op per ppermute, and a trailing
     merge.  Slab ops go through the pluggable backend (Pallas on TPU).
+
+    ``reduce=True`` runs the same loop with the fused-ADD backend ops:
+    each received slab is summed into the receiver's rows.  ppermute
+    hands non-recipients a zero slab, but their ``recv_valid`` table
+    entry is 0, so the masked add leaves their accumulator bit-exact.
     """
     if not steps:
         return buf
-    extract, merge, step = _slab_ops()
+    extract, merge, step = _slab_ops(reduce)
     _, payload0, send0, _, _ = steps[0]
     out = extract(buf, jnp.asarray(send0)[r], payload0)
     for k, (perm, payload, send_start, recv_start, recv_valid) in \
@@ -808,6 +839,337 @@ def run_alltoallv(mesh: Mesh, axis_name: str,
     xg = jax.device_put(x, NamedSharding(mesh, P(axis_name)))
     out = np.asarray(run(xg)).reshape(p, plan.out_rows, F)
     return [out[j, : plan.out_valid[j]] for j in range(p)], plan
+
+
+# --------------------------------------------------------------------------
+# reduction collectives: reduce_scatterv / allreducev
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ReduceScattervPlan:
+    """Validated SPMD schedule for reduce_scatterv.
+
+    Same step-table format as :class:`GathervPlan`/:class:`ComposedPlan`
+    — the SAME ``_apply_steps`` executor runs it, with ``reduce=True``
+    swapping the merge for the fused ADD (``slab_step_reduce``).  Every
+    device supplies a full (total, F) contribution vector in flat layout
+    (segment ``j``'s rows at ``offsets[j]``); device ``j`` ends with
+    ``sum_i contribution_i[offsets[j]: offsets[j]+sizes[j]]``.
+
+    Bitwise determinism: the step tables are a pure function of
+    ``sizes`` (host-built, no timing dependence), each flat row receives
+    at most one fold per step (unique receiver per wave + disjoint row
+    ranges per round), and every fold is ordered by step index — so the
+    floating-point summation order per row is FIXED, making results
+    reproducible run-to-run and pipelined plans bit-identical to their
+    monolithic counterparts.
+    """
+
+    p: int
+    sizes: tuple[int, ...]          # rows owned (received) by each rank
+    offsets: tuple[int, ...]        # flat row offset of each segment
+    total: int                      # sum(sizes)
+    cap: int                        # output rows per device (padded)
+    in_rows: int                    # input rows per device (>= 1)
+    buf_rows: int                   # working buffer rows (total + spill)
+    steps: tuple[tuple, ...]        # (perm, payload, send/recv tables)
+    num_rounds: int                 # schedule rounds (pre-bucketing)
+    tree_bytes_exact: int
+    tree_bytes_padded: int
+    segments: int = 1               # pipeline segment count S
+    stage_ids: tuple[int, ...] = ()   # pipeline stage of each step
+    num_stages: int = 0             # rounds + S - 1 stages
+    wave_bin_ratio: float = 0.0
+
+    @property
+    def padding_overhead(self) -> float:
+        """Within-step slab padding as a fraction (0.0 when nothing
+        moves — the all-zero / p=1 degenerate shapes must not divide by
+        zero; same guarded contract as the byte-moving plans)."""
+        if self.tree_bytes_exact == 0:
+            return 0.0
+        return self.tree_bytes_padded / self.tree_bytes_exact - 1.0
+
+    def validate(self) -> None:
+        """ppermute legality + bounds; raises AssertionError on violation.
+        The unique-receiver check is CORRECTNESS here, not just
+        legality: a row folded twice in one step would double-count."""
+        recv_total = 0
+        for perm, payload, send_start, recv_start, recv_valid in self.steps:
+            srcs = [s for s, _ in perm]
+            dsts = [d for _, d in perm]
+            assert len(set(srcs)) == len(srcs), "step has a double sender"
+            assert len(set(dsts)) == len(dsts), "step has a double receiver"
+            assert 1 <= payload
+            for s, d in perm:
+                assert 0 <= send_start[s] <= self.buf_rows - payload
+                assert 0 <= recv_start[d] <= self.buf_rows - payload
+                assert 0 < recv_valid[d] <= payload
+                recv_total += int(recv_valid[d])
+        assert recv_total == self.tree_bytes_exact
+        assert self.tree_bytes_exact <= self.tree_bytes_padded
+
+
+def plan_reduce_scatterv(sizes, bucket_rounds: int = 1, segments: int = 1,
+                         wave_bin_ratio: float = 0.0, validate: bool = True,
+                         schedule: ComposedSchedule | None = None
+                         ) -> ReduceScattervPlan:
+    """Lower a reduce_scatterv schedule to fused-add ppermute steps.
+
+    Default schedule: the packed per-segment reduction trees of
+    :func:`repro.core.composed.reduce_scatterv_schedule`.  Pass the
+    direct or recursive-halving schedule to race the alternatives (the
+    tuner does).
+
+    ``segments > 1`` pipelines the schedule.  Tree/direct schedules
+    segment PER SEGMENT-SPAN (each owned segment's rows chunk
+    independently — the alltoallv lesson: global chunks would leave
+    whole segments unsplit); halving transfers carry multi-segment
+    contiguous ranges, so they pipeline by GLOBAL row chunks instead.
+    Correctness is unaffected either way: per-chunk rows still fold in
+    their rounds' order (see :class:`ReduceScattervPlan` determinism
+    note).
+    """
+    if schedule is None:
+        schedule = reduce_scatterv_schedule(sizes)
+    assert schedule.kind == "reduce_scatterv"
+    # a prebuilt schedule must describe THIS problem, not a stale one
+    assert (schedule.sizes[0] == np.asarray([int(s) for s in sizes])).all(), \
+        "schedule was built for different segment sizes"
+    sizes = tuple(int(s) for s in schedule.sizes[0])
+    p = schedule.p
+    total = schedule.total_rows
+    cap = max(1, max(sizes, default=0))
+    offsets = tuple(int(x) for x in schedule.offsets(0))
+    rounds = [[(t.src, t.dst, t.size, t.start) for t in rnd]
+              for rnd in schedule.rounds]
+    multi_segment = any(t.lo != t.hi for rnd in schedule.rounds for t in rnd)
+    if multi_segment:
+        rounds = pipeline_rounds(rounds, segments, total)
+    else:
+        spans = [(offsets[j], offsets[j] + sizes[j])
+                 for j in range(p) if sizes[j] > 0]
+        rounds = pipeline_rounds_per_tree(rounds, segments, spans)
+    steps, exact, padded, max_payload, stage_ids = _bucketed_steps(
+        rounds, p, bucket_rounds, wave_bin_ratio)
+    buf_rows = total + max(cap, max_payload)
+    plan = ReduceScattervPlan(
+        p, sizes, offsets, total, cap, max(1, total), buf_rows, steps,
+        num_rounds=schedule.num_rounds, tree_bytes_exact=exact,
+        tree_bytes_padded=padded, segments=int(segments),
+        stage_ids=stage_ids,
+        num_stages=_pipeline_num_stages(schedule.num_rounds, segments),
+        wave_bin_ratio=float(wave_bin_ratio))
+    if validate:
+        plan.validate()
+    return plan
+
+
+@dataclass(frozen=True)
+class AllreducevPlan:
+    """allreducev = reduce_scatterv then allgatherv on ONE buffer.
+
+    The post-reduce state — owner ``j``'s fully reduced block at
+    ``offsets[j]`` — is EXACTLY the allgatherv start state (its
+    ``in_starts`` are the same cumsum offsets), so the two step-table
+    sequences concatenate with no repacking in between.  The composite
+    exposes ``steps``/``stage_ids``/``padding_overhead`` etc. so the
+    tuner's ``plan_step_cost``/``plan_pipeline_cost`` price it like any
+    single plan.
+    """
+
+    rs: ReduceScattervPlan
+    ag: ComposedPlan
+
+    @property
+    def p(self) -> int:
+        return self.rs.p
+
+    @property
+    def sizes(self) -> tuple[int, ...]:
+        return self.rs.sizes
+
+    @property
+    def offsets(self) -> tuple[int, ...]:
+        return self.rs.offsets
+
+    @property
+    def total(self) -> int:
+        return self.rs.total
+
+    @property
+    def in_rows(self) -> int:
+        return self.rs.in_rows
+
+    @property
+    def buf_rows(self) -> int:
+        return max(self.rs.buf_rows, self.ag.buf_rows)
+
+    @property
+    def steps(self) -> tuple[tuple, ...]:
+        return self.rs.steps + self.ag.steps
+
+    @property
+    def stage_ids(self) -> tuple[int, ...]:
+        # gather stages run strictly after every reduce stage completed
+        shift = self.rs.num_stages
+        return self.rs.stage_ids + tuple(s + shift for s in self.ag.stage_ids)
+
+    @property
+    def num_stages(self) -> int:
+        return self.rs.num_stages + self.ag.num_stages
+
+    @property
+    def num_rounds(self) -> int:
+        return self.rs.num_rounds + self.ag.num_rounds
+
+    @property
+    def segments(self) -> int:
+        return max(self.rs.segments, self.ag.segments)
+
+    @property
+    def tree_bytes_exact(self) -> int:
+        return self.rs.tree_bytes_exact + self.ag.tree_bytes_exact
+
+    @property
+    def tree_bytes_padded(self) -> int:
+        return self.rs.tree_bytes_padded + self.ag.tree_bytes_padded
+
+    @property
+    def padding_overhead(self) -> float:
+        if self.tree_bytes_exact == 0:
+            return 0.0
+        return self.tree_bytes_padded / self.tree_bytes_exact - 1.0
+
+    def validate(self) -> None:
+        self.rs.validate()
+        self.ag.validate()
+        assert self.rs.sizes == tuple(
+            int(s) for s in np.diff(
+                list(self.ag.in_starts) + [self.ag.total])), \
+            "reduce and gather halves disagree on the segment layout"
+
+
+def plan_allreducev(sizes, bucket_rounds: int = 1, segments: int = 1,
+                    wave_bin_ratio: float = 0.0, validate: bool = True,
+                    rs_schedule: ComposedSchedule | None = None,
+                    ag_schedule: ComposedSchedule | None = None
+                    ) -> AllreducevPlan:
+    """Lower allreducev: a reduce_scatterv plan chained with an
+    allgatherv plan over the same segment layout and buffer."""
+    rs = plan_reduce_scatterv(sizes, bucket_rounds=bucket_rounds,
+                              segments=segments,
+                              wave_bin_ratio=wave_bin_ratio,
+                              validate=validate, schedule=rs_schedule)
+    ag = plan_allgatherv(sizes, root=None, bucket_rounds=bucket_rounds,
+                         segments=segments, wave_bin_ratio=wave_bin_ratio,
+                         validate=validate, schedule=ag_schedule)
+    plan = AllreducevPlan(rs=rs, ag=ag)
+    if validate:
+        plan.validate()
+    return plan
+
+
+def reduce_scatterv_shard(x_local: jax.Array, plan: ReduceScattervPlan,
+                          axis_name: str) -> jax.Array:
+    """Per-shard reduce_scatterv body.  ``x_local``: (in_rows, F) — this
+    device's full flat contribution vector (segment ``j``'s rows at
+    ``offsets[j]``).  Returns (cap, F); rows [0:sizes[r]] on device ``r``
+    hold ``sum_i x_i[offsets[r]: offsets[r]+sizes[r]]``."""
+    r = jax.lax.axis_index(axis_name)
+    F = x_local.shape[1]
+    offs = jnp.asarray(plan.offsets, jnp.int32)
+    buf = jnp.zeros((plan.buf_rows, F), x_local.dtype)
+    buf = jax.lax.dynamic_update_slice(buf, x_local,
+                                       (jnp.int32(0), jnp.int32(0)))
+    buf = _apply_steps(buf, plan.steps, r, axis_name, reduce=True)
+    return jax.lax.dynamic_slice(buf, (offs[r], jnp.int32(0)),
+                                 (plan.cap, F))
+
+
+def allreducev_shard(x_local: jax.Array, plan: AllreducevPlan,
+                     axis_name: str) -> jax.Array:
+    """Per-shard allreducev body.  ``x_local``: (in_rows, F) full flat
+    contribution.  Returns (buf_rows, F); rows [0:total] hold the full
+    reduced vector on EVERY device.  One buffer end to end: the reduce
+    steps leave owner ``r``'s block at ``offsets[r]`` — allgatherv's
+    start state — so the gather steps run directly on the same buffer
+    with overwrite semantics."""
+    r = jax.lax.axis_index(axis_name)
+    F = x_local.shape[1]
+    buf = jnp.zeros((plan.buf_rows, F), x_local.dtype)
+    buf = jax.lax.dynamic_update_slice(buf, x_local,
+                                       (jnp.int32(0), jnp.int32(0)))
+    buf = _apply_steps(buf, plan.rs.steps, r, axis_name, reduce=True)
+    return _apply_steps(buf, plan.ag.steps, r, axis_name)
+
+
+def run_reduce_scatterv(mesh: Mesh, axis_name, contribs: list[np.ndarray],
+                        sizes, bucket_rounds: int = 1, segments: int = 1,
+                        wave_bin_ratio: float = 0.0,
+                        schedule: ComposedSchedule | None = None):
+    """Host-facing helper: sum the per-device contribution vectors and
+    scatter ownership.  ``contribs[i]``: (total, F) flat contribution of
+    rank ``i``; ``sizes[j]`` rows at segment ``j``'s offset go to rank
+    ``j``.  Returns (list of per-device reduced blocks, plan)."""
+    p = len(contribs)
+    if p != mesh.devices.size:
+        raise ValueError(f"{p} contributions for a "
+                         f"{mesh.devices.size}-device mesh")
+    plan = plan_reduce_scatterv(sizes, bucket_rounds=bucket_rounds,
+                                segments=segments,
+                                wave_bin_ratio=wave_bin_ratio,
+                                schedule=schedule)
+    F = contribs[0].shape[1]
+    x = np.zeros((p, plan.in_rows, F), contribs[0].dtype)
+    for i, c in enumerate(contribs):
+        x[i, : plan.total] = c
+    x = x.reshape(p * plan.in_rows, F)
+
+    @jax.jit
+    def run(xg):
+        return shard_map_unchecked(
+            lambda xl: reduce_scatterv_shard(xl, plan, axis_name),
+            mesh=mesh, in_specs=P(axis_name), out_specs=P(axis_name),
+        )(xg)
+
+    xg = jax.device_put(x, NamedSharding(mesh, P(axis_name)))
+    out = np.asarray(run(xg)).reshape(p, plan.cap, F)
+    return [out[j, : plan.sizes[j]] for j in range(p)], plan
+
+
+def run_allreducev(mesh: Mesh, axis_name, contribs: list[np.ndarray],
+                   sizes, bucket_rounds: int = 1, segments: int = 1,
+                   wave_bin_ratio: float = 0.0,
+                   rs_schedule: ComposedSchedule | None = None,
+                   ag_schedule: ComposedSchedule | None = None):
+    """Host-facing helper: allreducev the per-device contribution
+    vectors.  Returns ((p, total, F) array — every device's copy of the
+    reduced vector — and the plan)."""
+    p = len(contribs)
+    if p != mesh.devices.size:
+        raise ValueError(f"{p} contributions for a "
+                         f"{mesh.devices.size}-device mesh")
+    plan = plan_allreducev(sizes, bucket_rounds=bucket_rounds,
+                           segments=segments,
+                           wave_bin_ratio=wave_bin_ratio,
+                           rs_schedule=rs_schedule, ag_schedule=ag_schedule)
+    F = contribs[0].shape[1]
+    x = np.zeros((p, plan.in_rows, F), contribs[0].dtype)
+    for i, c in enumerate(contribs):
+        x[i, : plan.total] = c
+    x = x.reshape(p * plan.in_rows, F)
+
+    @jax.jit
+    def run(xg):
+        return shard_map_unchecked(
+            lambda xl: allreducev_shard(xl, plan, axis_name),
+            mesh=mesh, in_specs=P(axis_name), out_specs=P(axis_name),
+        )(xg)
+
+    xg = jax.device_put(x, NamedSharding(mesh, P(axis_name)))
+    out = np.asarray(run(xg)).reshape(p, plan.buf_rows, F)
+    return out[:, : plan.total], plan
 
 
 # --------------------------------------------------------------------------

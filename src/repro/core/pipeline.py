@@ -224,6 +224,68 @@ def execute_alltoallv_plan_numpy(plan, blocks) -> list[np.ndarray]:
     return [out[j, : plan.out_valid[j]] for j in range(p)]
 
 
+def execute_reduce_steps_numpy(steps, bufs: np.ndarray) -> np.ndarray:
+    """Run step tables with FUSED-ADD receive semantics, in NumPy.
+
+    Identical to :func:`execute_steps_numpy` except each received slab is
+    ADDED into the receiver's rows instead of overwriting them — the
+    oracle of ``jax_collectives._apply_steps(..., reduce=True)`` and of
+    the ``slab_step_reduce`` kernel.  ppermute snapshot semantics (every
+    receive reads sender state from before the step) are what make the
+    reduction well-defined: a rank may fold in a partial sum and forward
+    its own in the same step without double counting.
+    """
+    bufs = np.array(bufs, copy=True)
+    for perm, payload, send_start, recv_start, recv_valid in steps:
+        snap = bufs.copy()
+        for s, d in perm:
+            s0 = int(send_start[s])
+            r0 = int(recv_start[d])
+            nv = int(recv_valid[d])
+            bufs[d, r0: r0 + nv] += snap[s, s0: s0 + nv]
+    return bufs
+
+
+def execute_reduce_scatterv_plan_numpy(plan, contribs) -> list[np.ndarray]:
+    """Run a lowered reduce_scatterv plan end-to-end in NumPy.
+
+    ``contribs[i]``: rank ``i``'s (total, F) flat contribution vector
+    (segment ``j``'s rows at ``plan.offsets[j]``).  Returns rank ``j``'s
+    reduced block ``sum_i contribs[i][offsets[j]: offsets[j]+sizes[j]]``
+    — one (sizes[j], F) array per device.  The host-side oracle the
+    differential tests and the MoE bench's numeric leg compare the SPMD
+    executor against.
+    """
+    p = plan.p
+    contribs = [np.asarray(c) for c in contribs]
+    F = contribs[0].shape[1]
+    dtype = np.result_type(*(c.dtype for c in contribs))
+    bufs = np.zeros((p, plan.buf_rows, F), dtype)
+    for i in range(p):
+        bufs[i, : plan.total] = contribs[i]
+    fin = execute_reduce_steps_numpy(plan.steps, bufs)
+    return [fin[j, plan.offsets[j]: plan.offsets[j] + plan.sizes[j]]
+            for j in range(p)]
+
+
+def execute_allreducev_plan_numpy(plan, contribs) -> list[np.ndarray]:
+    """Run a lowered allreducev plan (reduce_scatterv then allgatherv on
+    one buffer) end-to-end in NumPy.  Returns the full (total, F) reduced
+    vector, one copy per device — all ``p`` copies must be identical."""
+    p = plan.p
+    contribs = [np.asarray(c) for c in contribs]
+    F = contribs[0].shape[1]
+    dtype = np.result_type(*(c.dtype for c in contribs))
+    bufs = np.zeros((p, plan.buf_rows, F), dtype)
+    for i in range(p):
+        bufs[i, : plan.total] = contribs[i]
+    bufs = execute_reduce_steps_numpy(plan.rs.steps, bufs)
+    # post-reduce state (owner j's reduced block at offsets[j]) is exactly
+    # the allgatherv start state; its steps overwrite, never add
+    fin = execute_steps_numpy(plan.ag.steps, bufs)
+    return [fin[j, : plan.total] for j in range(p)]
+
+
 def execute_scatter_steps_numpy(plan, bufs: np.ndarray) -> np.ndarray:
     """NumPy mirror of ``jax_collectives.scatterv_shard``'s reverse walk:
     the gather plan's steps run backwards with transposed tables (parent

@@ -194,6 +194,86 @@ def slab_step_kernel(buf: jax.Array, slab: jax.Array, recv_start: jax.Array,
     )(recv_start, recv_valid, send_start, buf, slab)
 
 
+def _slab_merge_add_kernel(start_ref, valid_ref, buf_ref, slab_ref, o_ref, *,
+                           rows: int):
+    o_ref[...] = buf_ref[...]
+    s0 = start_ref[0]
+    nv = valid_ref[0]
+    cur = o_ref[pl.ds(s0, rows), :]
+    mask = (jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0) < nv)
+    # masked rows select cur outright (cur + 0 would flip -0.0 to +0.0)
+    o_ref[pl.ds(s0, rows), :] = jnp.where(mask, cur + slab_ref[...], cur)
+
+
+def slab_merge_add_kernel(buf: jax.Array, slab: jax.Array, start: jax.Array,
+                          valid: jax.Array, *,
+                          interpret: bool = False) -> jax.Array:
+    """ADD the ``valid``-row prefix of ``slab`` into ``buf`` at dynamic
+    row ``start`` (rows >= valid keep buf's data bit-exactly: the mask
+    selects ``cur`` unmodified).  The reduction dual of
+    ``slab_merge_kernel``."""
+    rows, f = slab.shape
+    return pl.pallas_call(
+        functools.partial(_slab_merge_add_kernel, rows=rows),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,           # start, valid live in SMEM
+            grid=(1,),
+            in_specs=[pl.BlockSpec(buf.shape, lambda t, s, v: (0, 0)),
+                      pl.BlockSpec((rows, f), lambda t, s, v: (0, 0))],
+            out_specs=pl.BlockSpec(buf.shape, lambda t, s, v: (0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct(buf.shape, buf.dtype),
+        interpret=interpret,
+    )(start, valid, buf, slab)
+
+
+def _slab_step_reduce_kernel(recv_ref, valid_ref, send_ref, buf_ref,
+                             slab_ref, o_buf_ref, o_slab_ref, *,
+                             rows_in: int, rows_out: int):
+    o_buf_ref[...] = buf_ref[...]
+    r0 = recv_ref[0]
+    nv = valid_ref[0]
+    cur = o_buf_ref[pl.ds(r0, rows_in), :]
+    mask = (jax.lax.broadcasted_iota(jnp.int32, (rows_in, 1), 0) < nv)
+    # masked rows select cur outright (cur + 0 would flip -0.0 to +0.0)
+    o_buf_ref[pl.ds(r0, rows_in), :] = jnp.where(mask, cur + slab_ref[...],
+                                                 cur)
+    # extract AFTER the fold landed: a root-ward forward carries the
+    # partial sum including the contribution that just arrived
+    s0 = send_ref[0]
+    o_slab_ref[...] = o_buf_ref[pl.ds(s0, rows_out), :]
+
+
+def slab_step_reduce_kernel(buf: jax.Array, slab: jax.Array,
+                            recv_start: jax.Array, recv_valid: jax.Array,
+                            send_start: jax.Array, rows_out: int, *,
+                            interpret: bool = False
+                            ) -> tuple[jax.Array, jax.Array]:
+    """Fused reduce-dataplane step: ADD the ``recv_valid``-row prefix of
+    ``slab`` into ``buf`` at dynamic row ``recv_start`` (merge-received +
+    reduce-into-accumulator), and return ``(updated_buf, next_slab)``
+    where ``next_slab`` is the ``rows_out``-row slab of the UPDATED
+    buffer at dynamic row ``send_start`` (extract-next) — one kernel
+    launch and one buffer traversal per reduction step."""
+    rows_in, f = slab.shape
+    return pl.pallas_call(
+        functools.partial(_slab_step_reduce_kernel, rows_in=rows_in,
+                          rows_out=rows_out),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,           # recv, valid, send live in SMEM
+            grid=(1,),
+            in_specs=[pl.BlockSpec(buf.shape, lambda t, r, v, s: (0, 0)),
+                      pl.BlockSpec((rows_in, f), lambda t, r, v, s: (0, 0))],
+            out_specs=[pl.BlockSpec(buf.shape, lambda t, r, v, s: (0, 0)),
+                       pl.BlockSpec((rows_out, f),
+                                    lambda t, r, v, s: (0, 0))],
+        ),
+        out_shape=(jax.ShapeDtypeStruct(buf.shape, buf.dtype),
+                   jax.ShapeDtypeStruct((rows_out, f), buf.dtype)),
+        interpret=interpret,
+    )(recv_start, recv_valid, send_start, buf, slab)
+
+
 def slab_merge_kernel(buf: jax.Array, slab: jax.Array, start: jax.Array,
                       valid: jax.Array, *,
                       interpret: bool = False) -> jax.Array:

@@ -9,8 +9,9 @@ import jax
 import jax.numpy as jnp
 
 from .kernel import (ragged_gather_kernel, ragged_scatter_kernel,
-                     slab_extract_kernel, slab_merge_kernel,
-                     slab_step_kernel)
+                     slab_extract_kernel, slab_merge_add_kernel,
+                     slab_merge_kernel, slab_step_kernel,
+                     slab_step_reduce_kernel)
 from .ref import build_pack_index
 
 
@@ -116,3 +117,31 @@ def slab_step(buf, got, recv_start, recv_valid, send_start, rows_out: int, *,
     s = jnp.asarray(send_start, jnp.int32).reshape(1)
     return slab_step_kernel(buf, got, r, v, s, rows_out,
                             interpret=interpret)
+
+
+def slab_merge_add(buf, slab, start, valid, *, interpret: bool | None = None):
+    """ADD the ``valid``-row prefix of ``slab`` into ``buf`` at traced row
+    ``start`` via the Pallas kernel (reduce-dataplane receive-side)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    s = jnp.asarray(start, jnp.int32).reshape(1)
+    v = jnp.asarray(valid, jnp.int32).reshape(1)
+    return slab_merge_add_kernel(buf, slab, s, v, interpret=interpret)
+
+
+def slab_step_reduce(buf, got, recv_start, recv_valid, send_start,
+                     rows_out: int, *, interpret: bool | None = None):
+    """Fused reduce-dataplane step via one Pallas invocation: fold the
+    received slab ``got`` into the accumulator at traced row
+    ``recv_start`` (``recv_valid`` live rows, ADD not overwrite), then
+    extract the next ``rows_out``-row outgoing partial sum of the UPDATED
+    buffer at traced row ``send_start``.  Returns ``(buf, next_slab)``.
+    Matches ``ref.slab_step_reduce_ref`` bitwise (differentially tested).
+    NOT jit-wrapped: called inside traced ``shard_map`` bodies."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    r = jnp.asarray(recv_start, jnp.int32).reshape(1)
+    v = jnp.asarray(recv_valid, jnp.int32).reshape(1)
+    s = jnp.asarray(send_start, jnp.int32).reshape(1)
+    return slab_step_reduce_kernel(buf, got, r, v, s, rows_out,
+                                   interpret=interpret)

@@ -58,6 +58,37 @@ def slab_step_ref(buf: jnp.ndarray, got: jnp.ndarray, recv_start,
     return buf, slab_extract_ref(buf, send_start, rows_out)
 
 
+def slab_merge_add_ref(buf: jnp.ndarray, slab: jnp.ndarray, start,
+                       valid) -> jnp.ndarray:
+    """ADD the ``valid``-row prefix of ``slab`` into ``buf`` at row
+    ``start``; rows >= valid keep buf's data unchanged.  The reduction
+    dual of ``slab_merge_ref`` — masked rows select ``cur`` outright (not
+    ``cur + 0``, which would rewrite ``-0.0`` as ``+0.0``), so the
+    accumulator stays bitwise untouched outside the live prefix."""
+    start = jnp.asarray(start, jnp.int32).reshape(())
+    valid = jnp.asarray(valid, jnp.int32).reshape(())
+    rows = slab.shape[0]
+    cur = jax.lax.dynamic_slice(buf, (start, jnp.int32(0)),
+                                (rows, buf.shape[1]))
+    mask = (jnp.arange(rows, dtype=jnp.int32) < valid)[:, None]
+    # masked rows select cur outright (cur + 0 would flip -0.0 to +0.0)
+    return jax.lax.dynamic_update_slice(buf, jnp.where(mask, cur + slab, cur),
+                                        (start, jnp.int32(0)))
+
+
+def slab_step_reduce_ref(buf: jnp.ndarray, got: jnp.ndarray, recv_start,
+                         recv_valid, send_start,
+                         rows_out: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused REDUCTION dataplane step: fold the received slab into the
+    accumulator (add, not overwrite), then extract the next outgoing
+    partial sum FROM THE UPDATED buffer — a root-ward forward must carry
+    the contribution that just arrived.  Semantically exactly
+    ``slab_merge_add_ref`` followed by ``slab_extract_ref``; the Pallas
+    ``slab_step_reduce_kernel`` must match this oracle bitwise."""
+    buf = slab_merge_add_ref(buf, got, recv_start, recv_valid)
+    return buf, slab_extract_ref(buf, send_start, rows_out)
+
+
 def pack_blocks_ref(blocks: jnp.ndarray, sizes: jnp.ndarray,
                     total_pad: int) -> jnp.ndarray:
     """Pack padded (N, cap, F) blocks into a contiguous (total_pad, F)

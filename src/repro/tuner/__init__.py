@@ -16,9 +16,10 @@ schedules:
   measured racing and hysteresis;
 * :mod:`~repro.tuner.cache` — persistent, versioned, LRU-bounded plan
   cache keyed by (op, p, quantized m-signature, root, dtype, mesh);
-* :mod:`~repro.tuner.service` — :class:`PlannerService`, the four ops'
-  serving front end (the old ``RaggedGathervPlanner`` is now a shim
-  over it).
+* :mod:`~repro.tuner.service` — :class:`PlannerService`, the six ops'
+  serving front end — gatherv/scatterv/allgatherv/alltoallv plus the
+  reduction collectives reduce_scatterv/allreducev (the old
+  ``RaggedGathervPlanner`` is now a shim over it).
 """
 from .cache import (CACHE_VERSION, PlanCache, PlanKey,  # noqa: F401
                     mesh_fingerprint, quantize_matrix, quantize_sizes)

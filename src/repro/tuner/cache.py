@@ -28,9 +28,11 @@ import pickle
 from collections import OrderedDict
 from dataclasses import dataclass
 
-CACHE_VERSION = 4  # v4: hierarchical meshes — mesh fingerprints carry the
-                   # host topology (hosts x devices-per-host), two-level
-                   # candidates join the enumeration
+CACHE_VERSION = 5  # v5: reduction collectives — reduce_scatterv/allreducev
+                   # join the op space with their own PlanKey op tags;
+                   # dtype in the key now discriminates accumulation type
+                   # (f32 vs bf16 reduce plans compile differently even
+                   # when their byte schedules match)
 PICKLE_PROTOCOL = 4  # fixed: byte-identical round-trips across sessions
 
 _UNLOADED = object()  # sentinel: entry known from the index, not yet read

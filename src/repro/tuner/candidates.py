@@ -34,14 +34,18 @@ from repro.core import baselines
 from repro.core import extensions as ext
 from repro.core.composed import (allgatherv_schedule,
                                  alltoallv_direct_schedule,
-                                 alltoallv_schedule)
+                                 alltoallv_schedule,
+                                 reduce_scatterv_direct_schedule,
+                                 reduce_scatterv_halving_schedule,
+                                 reduce_scatterv_schedule)
 from repro.core.costmodel import (CostParams, HierarchicalCostParams,
                                   HostTopology, edge_params_fn,
                                   simulate_gather, simulate_scatter)
 from repro.core.treegather import (GatherTree, build_gather_tree,
                                    construction_alpha_rounds)
 
-OPS = ("gatherv", "scatterv", "allgatherv", "alltoallv")
+OPS = ("gatherv", "scatterv", "allgatherv", "alltoallv",
+       "reduce_scatterv", "allreducev")
 
 
 @dataclass(frozen=True)
@@ -440,6 +444,99 @@ def composed_dataplane_candidates(op: str, arg, root: int | None = None,
     return out
 
 
+# --------------------------------------------------------------------------
+# reduction ops: reduce_scatterv / allreducev
+# --------------------------------------------------------------------------
+
+def reduce_dataplane_candidates(op: str, arg,
+                                buckets=(1, 2, 4),
+                                segments=(1,),
+                                wave_bins=(),
+                                topology: HostTopology | None = None
+                                ) -> list[Candidate]:
+    """The reduction schedule space, costed on lowered fused-add plans.
+
+    Three schedule families race (the ISSUE's candidate set):
+
+    * ``tuw_reduce`` — the packed per-segment TUW reduction trees
+      (:func:`reduce_scatterv_schedule`): partial sums flow root-ward
+      down each owner's reversed scatter route, ``~log2 p`` rounds per
+      tree, packed round-robin.  Enumerated across ``buckets`` /
+      ``segments`` / ``wave_bins`` exactly like the composed byte-moving
+      schedules.
+    * ``halving_reduce`` — Träff-style non-pipelined recursive halving
+      (``p = 2^k`` only): ``log2 p`` rounds, per-rank bytes
+      ``~ total * (p-1)/p`` — the classic bandwidth-optimal construction
+      (arXiv 2410.14234's baseline shape).  Its transfers span multiple
+      segments, so its pipelined variant re-times by global row chunks.
+    * ``direct_reduce`` — ``p - 1`` direct pairwise rounds, exact bytes,
+      no forwarding: the β-dominated large-message baseline.
+
+    For ``op="allreducev"`` each reduce schedule is chained with the
+    allgatherv plan over the same segment layout
+    (:func:`repro.core.jax_collectives.plan_allreducev`); the composite
+    plan exposes concatenated steps/stages, so the same two cost views
+    price it.  ``topology`` is accepted for signature parity; the
+    two-level reduction schedule is future work (the flat candidates are
+    correct on any mesh, just not DCN-optimal).
+    """
+    from repro.core.jax_collectives import (plan_allreducev,
+                                            plan_reduce_scatterv)
+
+    if op not in ("reduce_scatterv", "allreducev"):
+        raise ValueError(op)
+    m = [int(x) for x in arg]
+    p = len(m)
+    tuw = reduce_scatterv_schedule(m)
+    if op == "reduce_scatterv":
+        lower = lambda sched, b=1, s=1, wb=0.0: plan_reduce_scatterv(
+            m, bucket_rounds=b, segments=s, wave_bin_ratio=wb,
+            validate=False, schedule=sched)
+    else:
+        lower = lambda sched, b=1, s=1, wb=0.0: plan_allreducev(
+            m, bucket_rounds=b, segments=s, wave_bin_ratio=wb,
+            validate=False, rs_schedule=sched)
+
+    def add(out, name, plan, **meta):
+        cost = (plan_pipeline_cost if plan.segments > 1 else plan_step_cost)
+        out.append(Candidate(
+            name, op, True,
+            cost_fn=lambda P, pl=plan, c=cost: c(pl, P),
+            builder=lambda pl=plan: pl,
+            bytes_exact=plan.tree_bytes_exact, **meta))
+
+    def bin_tag(wb):
+        return f"g{wb:g}"
+
+    out: list[Candidate] = []
+    for b in buckets:
+        add(out, f"tuw_reduce(b={b})", lower(tuw, b), bucket_rounds=b)
+    for wb in wave_bins:
+        add(out, f"tuw_reduce(b=1,{bin_tag(wb)})", lower(tuw, 1, 1, wb),
+            wave_bin_ratio=wb)
+    for s in segments:
+        if s <= 1:
+            continue  # S=1 is exactly tuw_reduce(b=1) above
+        add(out, f"tuw_reduce(b=1,S={s})", lower(tuw, 1, s), segments=s)
+        for wb in wave_bins:
+            add(out, f"tuw_reduce(b=1,S={s},{bin_tag(wb)})",
+                lower(tuw, 1, s, wb), segments=s, wave_bin_ratio=wb)
+    if p > 0 and not (p & (p - 1)):
+        halving = reduce_scatterv_halving_schedule(m)
+        add(out, "halving_reduce", lower(halving))
+        for s in segments:
+            if s <= 1:
+                continue
+            add(out, f"halving_reduce(S={s})", lower(halving, 1, s),
+                segments=s)
+    direct = reduce_scatterv_direct_schedule(m)
+    add(out, "direct_reduce", lower(direct))
+    for wb in wave_bins:
+        add(out, f"direct_reduce({bin_tag(wb)})", lower(direct, 1, 1, wb),
+            wave_bin_ratio=wb)
+    return out
+
+
 def enumerate_candidates(op: str, arg, root: int | None,
                          params: CostParams, view: str = "model",
                          include_extensions: bool = False,
@@ -471,6 +568,13 @@ def enumerate_candidates(op: str, arg, root: int | None,
                                            include_extensions, topology)
         return rooted_dataplane_candidates(op, arg, root, buckets, segments,
                                            topology)
+    if op in ("reduce_scatterv", "allreducev"):
+        # reduction ops likewise have only the data-plane view: the fused
+        # -add executor IS the machine the schedules describe
+        return reduce_dataplane_candidates(op, arg, buckets=buckets,
+                                           segments=segments,
+                                           wave_bins=wave_bins,
+                                           topology=topology)
     # composed ops have a single machine view: the schedule IS the
     # round-synchronous data plane (simulate_composed == bucket-1 steps)
     return composed_dataplane_candidates(op, arg, root=root, buckets=buckets,

@@ -1,6 +1,6 @@
 """PlannerService: the calibrate → enumerate → select → cache pipeline as
 one serving-shaped object covering gatherv / scatterv / allgatherv /
-alltoallv.
+alltoallv and the reduction collectives reduce_scatterv / allreducev.
 
 A service instance owns
 
@@ -38,6 +38,7 @@ machine never share plans.
 from __future__ import annotations
 
 import uuid
+import warnings
 from collections import OrderedDict
 from dataclasses import dataclass
 
@@ -170,6 +171,11 @@ class PlannerService:
         self.compiled_hits = 0
         self.compiled_misses = 0
         self.last_selection: Selection | None = None
+        # hierarchical mode cannot attach an OnlineCalibrator (the ctor
+        # above raises), so races still run but their observations refit
+        # nothing.  That drop used to be silent; count it and warn once.
+        self.dropped_refit_observations = 0
+        self._warned_dropped_refit = False
 
     # ------------------------------------------------------------ planning
 
@@ -239,6 +245,23 @@ class PlannerService:
         if self.calibrator is not None and sel.measured:
             # online loop: the next selection uses the sharpened fit
             self.params = self.calibrator.fitted().cost_params()
+        elif (sel.measured and self.calibrator is None
+              and isinstance(self.params, HierarchicalCostParams)):
+            # hierarchical mode races candidates but has no calibrator to
+            # record into (online refit is flat-only, see __init__); the
+            # measurements improve THIS selection yet refit nothing.
+            # Surface the drop instead of losing it silently.
+            self.dropped_refit_observations += len(sel.measured)
+            if not self._warned_dropped_refit:
+                self._warned_dropped_refit = True
+                warnings.warn(
+                    "hierarchical PlannerService measured "
+                    f"{len(sel.measured)} candidate(s) but online "
+                    "calibration is flat-only: observations are used for "
+                    "selection, then dropped from refitting (counted in "
+                    "stats()['dropped_refit_observations']).  Refit "
+                    "hierarchical axes offline via calibrate_axes.",
+                    RuntimeWarning, stacklevel=2)
         rec = PlanRecord(op=op, plan=sel.candidate(cands).build(),
                          algo=sel.chosen, costs=sel.costs,
                          serial=uuid.uuid4().hex)
@@ -290,7 +313,9 @@ class PlannerService:
         self.compiled_misses += 1
         body = {"gatherv": jc.gatherv_shard, "scatterv": jc.scatterv_shard,
                 "allgatherv": jc.allgatherv_shard,
-                "alltoallv": jc.alltoallv_shard}[kind]
+                "alltoallv": jc.alltoallv_shard,
+                "reduce_scatterv": jc.reduce_scatterv_shard,
+                "allreducev": jc.allreducev_shard}[kind]
         fn = jax.jit(shard_map_unchecked(
             lambda xl: body(xl, plan, self.axis),
             mesh=self.mesh, in_specs=P(self.axis), out_specs=P(self.axis)))
@@ -402,6 +427,61 @@ class PlannerService:
                        else out[j, :0])
         return res, plan
 
+    def reduce_scatterv(self, contribs: list[np.ndarray], sizes):
+        """Sum the per-device flat contribution vectors; rank ``j`` keeps
+        segment ``j``.  ``contribs[i]``: (sum(sizes), F) in true (un-
+        quantized) layout.  Returns (list of (sizes[j], F) reduced
+        blocks, plan).  True segments pack at quantized offsets with
+        zero padding, so the padded rows sum to zero and the true rows'
+        sums are exact."""
+        sizes = [int(s) for s in sizes]
+        self._require_mesh(len(contribs))
+        F = int(contribs[0].shape[1])
+        dt = contribs[0].dtype
+        rec = self.plan_record("reduce_scatterv", sizes, dtype=str(dt),
+                               row_bytes=F * dt.itemsize)
+        plan = rec.plan
+        fn = self._compiled_fn("reduce_scatterv", rec, F, str(dt))
+        p = plan.p
+        x = np.zeros((p, plan.in_rows, F), dt)
+        for i, c in enumerate(contribs):
+            off_true, off_q = 0, 0
+            for j, s in enumerate(sizes):
+                x[i, off_q: off_q + s] = c[off_true: off_true + s]
+                off_true += s
+                off_q += plan.sizes[j]    # quantized stride
+        out = np.asarray(fn(self._put(x.reshape(p * plan.in_rows, F))))
+        out = out.reshape(p, plan.cap, F)
+        return [out[j, : sizes[j]] for j in range(p)], plan
+
+    def allreducev(self, contribs: list[np.ndarray], sizes):
+        """Sum the per-device flat contribution vectors; every rank ends
+        with the full reduced vector.  Returns ((p, sum(sizes), F) array
+        — padding rows stripped — and the plan)."""
+        sizes = [int(s) for s in sizes]
+        self._require_mesh(len(contribs))
+        F = int(contribs[0].shape[1])
+        dt = contribs[0].dtype
+        rec = self.plan_record("allreducev", sizes, dtype=str(dt),
+                               row_bytes=F * dt.itemsize)
+        plan = rec.plan
+        fn = self._compiled_fn("allreducev", rec, F, str(dt))
+        p = plan.p
+        x = np.zeros((p, plan.in_rows, F), dt)
+        for i, c in enumerate(contribs):
+            off_true, off_q = 0, 0
+            for j, s in enumerate(sizes):
+                x[i, off_q: off_q + s] = c[off_true: off_true + s]
+                off_true += s
+                off_q += plan.sizes[j]
+        out = np.asarray(fn(self._put(x.reshape(p * plan.in_rows, F))))
+        out = out.reshape(p, plan.buf_rows, F)
+        keep, off_q = [], 0
+        for j, s in enumerate(sizes):
+            keep.append(out[:, off_q: off_q + s])
+            off_q += plan.sizes[j]
+        return np.concatenate(keep, axis=1), plan
+
     @property
     def stats(self) -> dict:
         if isinstance(self.params, HierarchicalCostParams):
@@ -416,4 +496,6 @@ class PlannerService:
                 "compiled": len(self._compiled),
                 "compiled_hits": self.compiled_hits,
                 "compiled_misses": self.compiled_misses,
+                "dropped_refit_observations":
+                    self.dropped_refit_observations,
                 "params": params}
