@@ -71,6 +71,7 @@ def run(emit_rows=True):
     rows = []
     svc = PlannerService(mesh=None, quantum=1, params=CostParams.tpu_ici())
     warm_keys = []
+    selected = set()
     for arch in ("mixtral-8x7b", "deepseek-moe-16b"):
         loads, cfg = expert_loads(arch)
         # scale the measured load *distribution* to production dims: the
@@ -104,6 +105,7 @@ def run(emit_rows=True):
             S = dispatch_matrix(frac, tokens, E, bytes_per_tok)
             rec = svc.plan_record("alltoallv", S)
             warm_keys.append(S)
+            selected.add(rec.algo)
             plan = rec.plan
             sched = alltoallv_schedule(S)
             pred_bytes = independent_scatter_bytes(S)   # cost model: p trees
@@ -141,6 +143,10 @@ def run(emit_rows=True):
     assert svc.plan_hits - h0 == len(warm_keys), svc.stats
     rows.append(("moe_dispatch_replan/warm", float(svc.plan_hits),
                  f"misses={svc.plan_misses};entries={len(svc.cache)}"))
+    planner = {"plan_hits": svc.plan_hits, "plan_misses": svc.plan_misses,
+               "params_epoch": svc.stats["params_epoch"],
+               "drift_refits": svc.stats["drift_refits"],
+               "selected": sorted(selected)}
     if emit_rows:
         emit(rows)
-    return rows, None
+    return rows, {"planner": planner}

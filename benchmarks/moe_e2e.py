@@ -50,6 +50,7 @@ import argparse
 import json
 import os
 import sys
+import time
 
 import numpy as np
 
@@ -201,6 +202,113 @@ def throughput_study(svc: PlannerService, machine: SyntheticTimingBackend,
 
 
 # --------------------------------------------------------------------------
+# telemetry leg: tracing overhead + a sample Perfetto artifact
+# --------------------------------------------------------------------------
+
+TRACE_OVERHEAD_TARGET = 0.02     # tracing on must cost < 2% wall clock
+
+
+def _telemetry_pass() -> None:
+    """The instrumented surface, deterministically: plan misses (planner
+    spans), one cache hit, and residual recording (exec pricing +
+    guideline checks) on a fresh service — the exact call paths whose
+    tracing-on cost the <2% budget bounds."""
+    machine = SyntheticTimingBackend(alpha_s=2e-6, beta_s_per_byte=2.5e-11,
+                                     noise=0.03, seed=11)
+    svc = PlannerService(quantum=16, params=CostParams.tpu_ici())
+    for tokens in (4_096, 8_192, 16_384):
+        for shape in ("uniform", "zipf"):
+            n, S = ragged_moe_problem(P, tokens, shape)
+            st = step_times(svc, machine, n, S)
+            rec = svc.plan_record("alltoallv", S, row_bytes=ROW_BYTES)
+            svc.record_execution("alltoallv", rec, st["t_dispatch_s"],
+                                 row_bytes=ROW_BYTES, arg=S)
+
+
+def trace_overhead_leg(rows: list, repeats: int = 8,
+                       trace_path: str | None = None) -> dict:
+    """Tracing-off vs tracing-on wall clock on the instrumented planning
+    + residual paths, then one traced pass saved as a Chrome-trace
+    artifact.  Asserts the <2% overhead budget.
+
+    Methodology: one untimed warmup, then ``repeats`` INTERLEAVED
+    off/on pairs with the min taken per mode — interleaving exposes both
+    modes to the same slow machine drift (thermal, cache, co-tenants),
+    and the min discards the stragglers.  A shared box's run-to-run
+    noise still swamps a 2%-resolution wall-clock A/B, so the hard
+    budget is asserted on the ACCOUNTED overhead — the per-span record
+    cost (amortized over a tight loop, which is stable) times the spans
+    one pass emits, relative to the pass time — while the A/B overhead
+    is bounded against the pass's own observed noise band."""
+    from repro.obs import trace as obs_trace
+
+    prior = obs_trace.current()
+    try:
+        obs_trace.disable()
+        _telemetry_pass()            # warmup: imports, first-call caches
+        ts = {"off": [], "on": []}
+        n_events = 0
+        for _ in range(repeats):
+            for mode in ("off", "on"):
+                if mode == "on":
+                    r = obs_trace.enable(obs_trace.TraceRecorder())
+                else:
+                    obs_trace.disable()
+                t0 = time.perf_counter()
+                _telemetry_pass()
+                ts[mode].append(time.perf_counter() - t0)
+                if mode == "on":
+                    n_events = len(r.events)
+        best = {mode: min(v) for mode, v in ts.items()}
+        overhead = best["on"] / best["off"] - 1.0
+        # accounted overhead: spans/pass x per-span cost / pass seconds
+        obs_trace.disable()
+        cal = obs_trace.TraceRecorder()
+        reps = 20_000
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            cal.add_complete("cal/span", "planner", 0.0, 1e-6,
+                             op="alltoallv", p=P, cost=1.2e-3, epoch=0,
+                             row_bytes=ROW_BYTES, candidates=12)
+        span_cost_s = (time.perf_counter() - t0) / reps
+        accounted = span_cost_s * n_events / best["off"]
+        assert accounted < TRACE_OVERHEAD_TARGET, (span_cost_s, n_events,
+                                                   best, accounted)
+        # the A/B must sit inside the budget once the box's own noise
+        # band (spread of the UNTRACED passes) is granted
+        noise = (max(ts["off"]) - best["off"]) / best["off"]
+        assert overhead < TRACE_OVERHEAD_TARGET + noise, (best, ts,
+                                                          overhead)
+        # sample artifact: one traced pass, exported for Perfetto
+        recorder = obs_trace.enable(obs_trace.TraceRecorder())
+        _telemetry_pass()
+        if trace_path is None:
+            trace_path = os.path.join(RESULTS, "moe_e2e_trace.json")
+        obs_trace.disable()
+        saved = recorder.save(trace_path)
+        with open(saved) as f:       # round-trip: valid Chrome-trace JSON
+            doc = json.load(f)
+        events = doc["traceEvents"]
+        assert events and all("ph" in e and "ts" in e for e in events)
+    finally:
+        obs_trace.disable()
+        if prior is not None:
+            obs_trace.enable(prior)
+    rows.append(("moe_e2e/trace_overhead", overhead * 1e6,
+                 f"overhead_pct={overhead * 100:.3f};"
+                 f"accounted_pct={accounted * 100:.4f};"
+                 f"span_cost_us={span_cost_s * 1e6:.2f};"
+                 f"best_off_s={best['off']:.4f};"
+                 f"best_on_s={best['on']:.4f};"
+                 f"events={len(events)};target_pct=2"))
+    return {"path": saved, "events": len(events),
+            "overhead_frac": overhead, "accounted_frac": accounted,
+            "span_cost_s": span_cost_s, "best_off_s": best["off"],
+            "best_on_s": best["on"], "repeats": repeats,
+            "target_frac": TRACE_OVERHEAD_TARGET}
+
+
+# --------------------------------------------------------------------------
 # numeric end-to-end leg: a fwd+bwd step really flows through the plans
 # --------------------------------------------------------------------------
 
@@ -334,8 +442,16 @@ def run(emit_rows: bool = True, out_path: str | None = None):
                  f"dispatch={numeric['dispatch_algo']};"
                  f"combine={numeric['combine_algo']};"
                  f"top_k={numeric['top_k']};fwd_bwd_exact=True"))
+    trace_info = trace_overhead_leg(rows)
+    selected = sorted({a for r in regimes
+                       for a in (r["dispatch_algo"], r["combine_algo"],
+                                 r["grad_gather_algo"])})
+    planner = {"plan_hits": svc.plan_hits, "plan_misses": svc.plan_misses,
+               "params_epoch": svc.stats["params_epoch"],
+               "drift_refits": svc.stats["drift_refits"],
+               "selected": selected}
     payload = {
-        "version": 2,              # v2: fwd+bwd with reduction collectives
+        "version": 3,              # v3: telemetry (planner counters + trace)
         "assumed_params": {"alpha": assumed.alpha, "beta": assumed.beta,
                            "time_unit": assumed.time_unit,
                            "data_unit": assumed.data_unit},
@@ -348,6 +464,8 @@ def run(emit_rows: bool = True, out_path: str | None = None):
                    "hbm_bw": HBM_BW, "train_step": "fwd+bwd"},
         "regimes": regimes,
         "numeric_e2e": numeric,
+        "planner": planner,
+        "trace": trace_info,
         "targets": {"uniform_ratio_target": UNIFORM_TARGET,
                     "uniform_ok": uniform_ok, "skewed_win": skewed_win},
     }

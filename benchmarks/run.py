@@ -10,7 +10,7 @@ import os
 import sys
 import time
 
-SUMMARY_VERSION = 1
+SUMMARY_VERSION = 2   # v2: per-bench {rows, planner} records, row "algo"
 
 RESULTS = os.path.join(os.environ.get("REPRO_RESULTS", os.getcwd()),
                        "results")
@@ -18,7 +18,10 @@ RESULTS = os.path.join(os.environ.get("REPRO_RESULTS", os.getcwd()),
 
 def _row_record(name: str, us: float, derived) -> dict:
     """One CSV row as a record: the row name's first path component is
-    the op/bench family, the remainder the configuration."""
+    the op/bench family, the remainder the configuration.  The selected
+    candidate name (``algo=...`` in the derived string) is promoted to a
+    first-class ``algo`` field so perf dashboards can track selection
+    flips without string-parsing."""
     op, _, config = name.partition("/")
     metrics = {}
     for part in str(derived).split(";"):
@@ -27,17 +30,26 @@ def _row_record(name: str, us: float, derived) -> dict:
             metrics[k] = v
     return {"name": name, "op": op, "config": config,
             "us_per_call": float(us), "derived": str(derived),
-            "metrics": metrics}
+            "algo": metrics.get("algo"), "metrics": metrics}
 
 
-def write_summary(benches: dict[str, list], total_s: float,
+def _planner_block(payload) -> dict | None:
+    """The plan-cache hit/miss counters + selected-candidate names a
+    bench's run() reported (``payload["planner"]``), if any."""
+    if isinstance(payload, dict):
+        return payload.get("planner")
+    return None
+
+
+def write_summary(benches: dict[str, tuple], total_s: float,
                   out_path: str | None = None) -> str:
     payload = {
         "version": SUMMARY_VERSION,
         "total_seconds": total_s,
         "benches": {
-            name: [_row_record(*row) for row in rows]
-            for name, rows in benches.items()
+            name: {"rows": [_row_record(*row) for row in rows],
+                   "planner": _planner_block(bench_payload)}
+            for name, (rows, bench_payload) in benches.items()
         },
     }
     if out_path is None:
@@ -54,17 +66,17 @@ def main() -> None:
         tuner_bench, variants
     t0 = time.time()
     print("name,us_per_call,derived")
-    benches: dict[str, list] = {}
-    benches["paper_tables"] = paper_tables.run()[0]
-    benches["variants"] = variants.run()[0]
-    benches["guidelines"] = guidelines_bench.run()[0]
-    benches["extensions"] = extensions_bench.run()[0]
-    benches["moe_dispatch"] = moe_dispatch.run()[0]
-    benches["tuner"] = tuner_bench.run(synthetic=True)[0]
-    benches["pipeline"] = pipeline_bench.run()[0]
-    benches["moe_e2e"] = moe_e2e.run()[0]
-    benches["jax_runtime"] = jax_runtime.run()[0]
-    benches["roofline"] = roofline.run()[0]
+    benches: dict[str, tuple] = {}
+    benches["paper_tables"] = paper_tables.run()
+    benches["variants"] = variants.run()
+    benches["guidelines"] = guidelines_bench.run()
+    benches["extensions"] = extensions_bench.run()
+    benches["moe_dispatch"] = moe_dispatch.run()
+    benches["tuner"] = tuner_bench.run(synthetic=True)
+    benches["pipeline"] = pipeline_bench.run()
+    benches["moe_e2e"] = moe_e2e.run()
+    benches["jax_runtime"] = jax_runtime.run()
+    benches["roofline"] = roofline.run()
     total = time.time() - t0
     out = write_summary(benches, total)
     print(f"# total {total:.1f}s", file=sys.stderr)

@@ -84,6 +84,7 @@ range offsets with no reordering.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 
 import numpy as np
@@ -94,6 +95,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map  # noqa: F401  (re-exported for callers)
 from repro.compat import shard_map_unchecked
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import REGISTRY as _OBS_REGISTRY
 
 from .composed import (ComposedSchedule, allgatherv_schedule,
                        alltoallv_schedule, reduce_scatterv_schedule)
@@ -472,6 +475,32 @@ def scatterv_shard(buf_root: jax.Array, plan: GathervPlan, axis_name: str) -> ja
 # convenience drivers
 # --------------------------------------------------------------------------
 
+def _run_traced(op: str, plan, row_bytes: int, fn, xg) -> np.ndarray:
+    """Execute a jitted driver with the telemetry plane around it.
+
+    Wall-clock timing + default-registry counters always (single dict
+    update, cheap enough to leave on); a trace span with the plan shape
+    and bytes moved only when ``repro.obs.trace`` is enabled — the off
+    path is one ``None`` check.
+    """
+    tr = obs_trace.current()
+    t0 = time.perf_counter()
+    out = np.asarray(fn(xg))
+    dt = time.perf_counter() - t0
+    _OBS_REGISTRY.counter("run_" + op).inc()
+    _OBS_REGISTRY.histogram("run_seconds").observe(dt)
+    if tr is not None:
+        args = {"op": op, "p": plan.p,
+                "segments": getattr(plan, "segments", 1),
+                "num_stages": getattr(plan, "num_stages", 0),
+                "measured_s": dt, "row_bytes": int(row_bytes)}
+        for cls, nb in obs_trace.plan_link_bytes(
+                plan.steps, row_bytes=int(row_bytes)).items():
+            args[f"bytes_{cls}"] = nb
+        tr.add_complete("run/" + op, "collective", t0, dt, **args)
+    return out
+
+
 def run_gatherv(mesh: Mesh, axis_name, blocks: list[np.ndarray],
                 root: int, bucket_rounds: int = 1, segments: int = 1,
                 wave_bin_ratio: float = 0.0, tree: GatherTree | None = None):
@@ -496,8 +525,9 @@ def run_gatherv(mesh: Mesh, axis_name, blocks: list[np.ndarray],
         )(xg)
 
     xg = jax.device_put(x, NamedSharding(mesh, P(axis_name)))
-    out = run(xg)  # (p * buf_rows, F)
-    out = np.asarray(out).reshape(plan.p, plan.buf_rows, F)
+    out = _run_traced("gatherv", plan, F * blocks[0].dtype.itemsize,
+                      run, xg)  # (p * buf_rows, F)
+    out = out.reshape(plan.p, plan.buf_rows, F)
     return out[root, : plan.total], plan
 
 
@@ -520,7 +550,8 @@ def run_scatterv(mesh: Mesh, axis_name, data: np.ndarray,
         )(xg)
 
     xg = jax.device_put(xin, NamedSharding(mesh, P(axis_name)))
-    out = np.asarray(run(xg)).reshape(plan.p, plan.cap, F)
+    out = _run_traced("scatterv", plan, F * data.dtype.itemsize,
+                      run, xg).reshape(plan.p, plan.cap, F)
     return [out[i, : sizes[i]] for i in range(plan.p)], plan
 
 
@@ -800,7 +831,8 @@ def run_allgatherv(mesh: Mesh, axis_name, blocks: list[np.ndarray],
         )(xg)
 
     xg = jax.device_put(x, NamedSharding(mesh, P(axis_name)))
-    out = np.asarray(run(xg)).reshape(plan.p, plan.buf_rows, F)
+    out = _run_traced("allgatherv", plan, F * blocks[0].dtype.itemsize,
+                      run, xg).reshape(plan.p, plan.buf_rows, F)
     return out[:, : plan.total], plan
 
 
@@ -837,7 +869,8 @@ def run_alltoallv(mesh: Mesh, axis_name: str,
         )(xg)
 
     xg = jax.device_put(x, NamedSharding(mesh, P(axis_name)))
-    out = np.asarray(run(xg)).reshape(p, plan.out_rows, F)
+    out = _run_traced("alltoallv", plan, F * dtype.itemsize,
+                      run, xg).reshape(p, plan.out_rows, F)
     return [out[j, : plan.out_valid[j]] for j in range(p)], plan
 
 
@@ -1134,7 +1167,9 @@ def run_reduce_scatterv(mesh: Mesh, axis_name, contribs: list[np.ndarray],
         )(xg)
 
     xg = jax.device_put(x, NamedSharding(mesh, P(axis_name)))
-    out = np.asarray(run(xg)).reshape(p, plan.cap, F)
+    out = _run_traced("reduce_scatterv", plan,
+                      F * contribs[0].dtype.itemsize,
+                      run, xg).reshape(p, plan.cap, F)
     return [out[j, : plan.sizes[j]] for j in range(p)], plan
 
 
@@ -1168,7 +1203,8 @@ def run_allreducev(mesh: Mesh, axis_name, contribs: list[np.ndarray],
         )(xg)
 
     xg = jax.device_put(x, NamedSharding(mesh, P(axis_name)))
-    out = np.asarray(run(xg)).reshape(p, plan.buf_rows, F)
+    out = _run_traced("allreducev", plan, F * contribs[0].dtype.itemsize,
+                      run, xg).reshape(p, plan.buf_rows, F)
     return out[:, : plan.total], plan
 
 

@@ -13,6 +13,12 @@ straggle event and recommend an action:
 
 This container has one host, so the policy's *decisions* are what tests
 exercise; the actions map to the elastic restore in checkpoint/store.py.
+
+Besides the aggregate step-time path (:meth:`StragglerPolicy.observe`),
+the policy can consume *per-host* span times from the telemetry plane
+(:meth:`observe_hosts` / :meth:`observe_trace`): each host's collective
+time is compared against the median of the *other* hosts that step, so
+one slow host cannot drag its own baseline up and mask itself.
 """
 from __future__ import annotations
 
@@ -28,6 +34,8 @@ class StragglerPolicy:
     times: list = field(default_factory=list)
     events: list = field(default_factory=list)
     breaches: int = 0
+    host_breaches: dict = field(default_factory=dict)
+    host_events: list = field(default_factory=list)
 
     def observe(self, step: int, dt: float) -> str:
         self.times.append(dt)
@@ -45,3 +53,49 @@ class StragglerPolicy:
             return action
         self.breaches = max(0, self.breaches - 1)
         return "ok"
+
+    def observe_hosts(self, step: int, host_times: dict) -> dict:
+        """Per-host straggle check from one step's span times.
+
+        ``host_times`` maps host id -> seconds this host spent in the
+        step's collectives.  Each host is judged against the median of
+        the OTHER hosts (needs >= 3 hosts to be meaningful; with fewer
+        everything is 'ok').  Breach counts accumulate per host across
+        steps with the same warn/backup/evict ladder as :meth:`observe`
+        and decay by one on a clean step.
+        """
+        actions = {}
+        hosts = list(host_times)
+        for h in hosts:
+            others = [host_times[o] for o in hosts if o != h]
+            if len(others) < 2:
+                actions[h] = "ok"
+                continue
+            med = statistics.median(others)
+            dt = host_times[h]
+            if med > 0 and dt > self.factor * med:
+                n = self.host_breaches.get(h, 0) + 1
+                self.host_breaches[h] = n
+                action = ("evict" if n >= self.evict_after
+                          else "backup" if n > 1 else "warn")
+                self.host_events.append({"step": step, "host": h,
+                                         "dt": dt, "median": med,
+                                         "action": action})
+                actions[h] = action
+            else:
+                self.host_breaches[h] = max(
+                    0, self.host_breaches.get(h, 0) - 1)
+                actions[h] = "ok"
+        return actions
+
+    def observe_trace(self, step: int, recorder, cat: str = None) -> dict:
+        """Feed one step from a trace recorder's per-host span times.
+
+        ``recorder`` is an ``obs.trace.TraceRecorder``; spans that carry
+        a ``host`` arg (optionally filtered by ``cat``) are summed per
+        host and run through :meth:`observe_hosts`.
+        """
+        host_times = recorder.span_times_by("host", cat=cat)
+        if not host_times:
+            return {}
+        return self.observe_hosts(step, host_times)

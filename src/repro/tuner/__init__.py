@@ -24,9 +24,10 @@ schedules:
 from .cache import (CACHE_VERSION, PlanCache, PlanKey,  # noqa: F401
                     mesh_fingerprint, quantize_matrix, quantize_sizes)
 from .calibrate import (Calibration, HierarchicalCalibration,  # noqa: F401
-                        MeshTimingBackend, OnlineCalibrator,
-                        SyntheticHierarchicalBackend, SyntheticTimingBackend,
-                        calibrate, calibrate_axes, fit_alpha_beta)
+                        HierarchicalOnlineCalibrator, MeshTimingBackend,
+                        OnlineCalibrator, SyntheticHierarchicalBackend,
+                        SyntheticTimingBackend, calibrate, calibrate_axes,
+                        fit_alpha_beta, flat_weights, hierarchical_weights)
 from .candidates import (Candidate, OPS,  # noqa: F401
                          enumerate_candidates, plan_pipeline_cost,
                          plan_step_cost)

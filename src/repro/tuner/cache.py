@@ -28,11 +28,14 @@ import pickle
 from collections import OrderedDict
 from dataclasses import dataclass
 
-CACHE_VERSION = 5  # v5: reduction collectives — reduce_scatterv/allreducev
-                   # join the op space with their own PlanKey op tags;
-                   # dtype in the key now discriminates accumulation type
-                   # (f32 vs bf16 reduce plans compile differently even
-                   # when their byte schedules match)
+CACHE_VERSION = 6  # v6: telemetry plane — PlanKey grows a params-epoch
+                   # field (drift-triggered refits bump it, honestly
+                   # invalidating every plan priced under the stale
+                   # (α, β)); older stores carry epoch-less tokens and
+                   # are discarded wholesale
+# v5: reduction collectives — reduce_scatterv/allreducev joined the op
+# space with their own PlanKey op tags; dtype began discriminating
+# accumulation type
 PICKLE_PROTOCOL = 4  # fixed: byte-identical round-trips across sessions
 
 _UNLOADED = object()  # sentinel: entry known from the index, not yet read
@@ -82,7 +85,10 @@ class PlanKey:
 
     ``signature`` is the quantized size tuple (rooted/allgatherv ops) or
     tuple-of-tuples (alltoallv); ``root`` is -1 when algorithm-chosen or
-    not applicable.
+    not applicable.  ``epoch`` is the owning service's params epoch: a
+    drift-triggered refit bumps it, so every plan selected under the
+    pre-drift (α, β) stops resolving — stale selections are invalidated
+    by construction instead of by a sweep.
     """
 
     op: str
@@ -91,17 +97,19 @@ class PlanKey:
     root: int
     dtype: str
     mesh: str
+    epoch: int = 0
 
     def token(self) -> str:
         raw = repr((CACHE_VERSION, self.op, self.p, self.signature,
-                    self.root, self.dtype, self.mesh))
+                    self.root, self.dtype, self.mesh, self.epoch))
         return hashlib.sha1(raw.encode()).hexdigest()[:20]
 
 
 class PlanCache:
     """In-memory LRU with optional write-through persistence."""
 
-    def __init__(self, path: str | None = None, max_entries: int = 256):
+    def __init__(self, path: str | None = None, max_entries: int = 256,
+                 metrics=None):
         if max_entries < 1:
             raise ValueError("max_entries >= 1")
         self.path = path
@@ -110,6 +118,9 @@ class PlanCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        # optional telemetry: a repro.obs.metrics.Registry the cache
+        # publishes hit/miss/eviction counters into (None = don't)
+        self.metrics = metrics
         if path is not None:
             os.makedirs(path, exist_ok=True)
             self._load_index()
@@ -153,10 +164,15 @@ class PlanCache:
 
     # ----------------------------------------------------------- get / put
 
+    def _count(self, name: str, n: int = 1) -> None:
+        if self.metrics is not None:
+            self.metrics.counter(name).inc(n)
+
     def get(self, key: PlanKey):
         token = key.token()
         if token not in self._entries:
             self.misses += 1
+            self._count("plan_cache_misses")
             return None
         value = self._entries[token]
         if value is _UNLOADED:
@@ -166,6 +182,7 @@ class PlanCache:
             except (OSError, pickle.UnpicklingError, EOFError):
                 del self._entries[token]
                 self.misses += 1
+                self._count("plan_cache_misses")
                 return None
             self._entries[token] = value
         # NOTE: the LRU promotion is memory-only; the on-disk order is
@@ -173,12 +190,14 @@ class PlanCache:
         # recency, never entries — cheap beats exact on the warm path.
         self._entries.move_to_end(token)
         self.hits += 1
+        self._count("plan_cache_hits")
         return value
 
     def put(self, key: PlanKey, value) -> None:
         token = key.token()
         self._entries[token] = value
         self._entries.move_to_end(token)
+        self._count("plan_cache_puts")
         if self.path is not None:
             tmp = self._entry_file(token) + ".tmp"
             with open(tmp, "wb") as f:
@@ -187,6 +206,7 @@ class PlanCache:
         while len(self._entries) > self.max_entries:
             old, _ = self._entries.popitem(last=False)
             self.evictions += 1
+            self._count("plan_cache_evictions")
             if self.path is not None:
                 try:
                     os.remove(self._entry_file(old))

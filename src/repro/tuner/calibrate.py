@@ -332,6 +332,20 @@ class OnlineCalibrator:
             raise ValueError(f"bad measurement: {seconds}")
         self._obs.append((float(n_alpha), float(n_beta), float(seconds)))
 
+    def observe_candidate(self, candidate, seconds: float,
+                          row_bytes: int = 1) -> None:
+        """Record a measured candidate race directly.
+
+        The candidate's weights are in its own data unit (ROWS for the
+        PlannerService dataplane view); ``row_bytes`` converts the
+        β-weight so the ledger stays in seconds-per-byte.  This is the
+        selector's preferred entry point — calibrators that need more
+        than the flat 2-weight decomposition (see
+        :class:`HierarchicalOnlineCalibrator`) override it.
+        """
+        na, nb = candidate.alpha_beta_weights()
+        self.observe(na, nb * max(1, int(row_bytes)), seconds)
+
     def fitted(self) -> Calibration:
         """Solve the 2-parameter least squares with the ridge prior."""
         rows = list(self._obs)
@@ -354,3 +368,149 @@ class OnlineCalibrator:
             max(0.0, float(alpha)), max(1e-15, float(beta)),
             r2=self.prior.r2, n_samples=self.prior.n_samples + len(self._obs),
             backend=self.prior.backend + "+online")
+
+
+def flat_weights(cost_fn, at: CostParams) -> tuple[float, float]:
+    """Linear decomposition of a flat plan cost at ``at``: the 2-weight
+    sibling of :func:`hierarchical_weights`.
+
+    Forward differences at the operating point instead of unit-point
+    probes (``cost_fn(1, 0)`` / ``cost_fn(0, 1)``): the cost is
+    piecewise linear in (α, β) and the unit points can sit in a
+    different linear piece (different max() branches), so their slopes
+    misprice the piece the machine actually operates in.  Returns
+    ``(n_alpha, n_beta)`` in ``at``'s units with
+    ``cost ≈ n_alpha·α + n_beta·β`` exact inside the piece.
+    """
+    f0 = float(cost_fn(at))
+    ha = 1e-6 * (at.alpha if at.alpha > 0 else 1.0)
+    hb = 1e-6 * (at.beta if at.beta > 0 else 1.0)
+    na = (float(cost_fn(CostParams(at.alpha + ha, at.beta,
+                                   at.time_unit, at.data_unit))) - f0) / ha
+    nb = (float(cost_fn(CostParams(at.alpha, at.beta + hb,
+                                   at.time_unit, at.data_unit))) - f0) / hb
+    return max(0.0, na), max(0.0, nb)
+
+
+def hierarchical_weights(cost_fn, at: HierarchicalCostParams
+                         ) -> tuple[float, float, float, float]:
+    """Linear decomposition of a hierarchical plan cost at ``at``.
+
+    Every cost in this codebase is piecewise linear and positively
+    homogeneous of degree 1 in the parameter vector ``(α_ici, β_ici,
+    α_dcn, β_dcn)`` — max-selections (critical pairs, port-critical
+    loads) pick a linear piece, then the piece is a weighted sum.  By
+    Euler's homogeneous-function theorem the cost at ``at`` therefore
+    equals ``gradient(at) · at``, and inside ``at``'s linear piece the
+    gradient is constant, so small forward differences recover it
+    exactly:  ``cost = na_i·α_i + nb_i·β_i + na_d·α_d + nb_d·β_d``.
+
+    This is the 4-weight generalization of
+    :meth:`Candidate.alpha_beta_weights` (whose unit-point evaluation
+    would land in the WRONG linear piece for hierarchical params — the
+    α_ici=1 probe makes every ICI pair critical regardless of what the
+    real machine's max picks, double-counting mixed steps).  Returns
+    ``(na_ici, nb_ici, na_dcn, nb_dcn)`` in ``at``'s units.
+    """
+    at.validate()
+    f0 = float(cost_fn(at))
+    x = [at.ici.alpha, at.ici.beta, at.dcn.alpha, at.dcn.beta]
+    # perturbation bases: a zero coordinate still needs a sensible step,
+    # borrowed from the other link class of the same kind
+    base_a = max(x[0], x[2]) or 1.0
+    base_b = max(x[1], x[3]) or 1.0
+    bases = (base_a, base_b, base_a, base_b)
+    out = []
+    for j in range(4):
+        h = 1e-6 * (x[j] if x[j] > 0 else bases[j])
+        xp = list(x)
+        xp[j] += h
+        pp = HierarchicalCostParams(
+            CostParams(xp[0], xp[1], at.time_unit, at.data_unit),
+            CostParams(xp[2], xp[3], at.time_unit, at.data_unit),
+            at.topology)
+        out.append((float(cost_fn(pp)) - f0) / h)
+    return tuple(max(0.0, w) for w in out)
+
+
+class HierarchicalOnlineCalibrator:
+    """Per-link-class online refit: the 4-parameter sibling of
+    :class:`OnlineCalibrator`.
+
+    Hierarchical races used to be measured and then DROPPED from
+    refitting (the flat calibrator had nowhere to put a two-link-class
+    observation — ``stats()['dropped_refit_observations']``).  This
+    class keeps them: each observation is a 4-weight row ``(na_ici,
+    nb_ici, na_dcn, nb_dcn)`` from :func:`hierarchical_weights` plus
+    measured seconds, and ``fitted()`` solves the 4-parameter ridge
+    least squares with the prior as per-column pseudo-observations —
+    so a DCN-only drift refits the DCN (α, β) while an unobserved ICI
+    axis stays pinned to its prior.
+    """
+
+    def __init__(self, prior: HierarchicalCostParams,
+                 prior_weight: float = 4.0):
+        if prior_weight < 0:
+            raise ValueError("prior_weight >= 0")
+        prior.validate()
+        self.prior = prior
+        self.prior_weight = float(prior_weight)
+        self._obs: list[tuple[tuple[float, float, float, float], float]] = []
+
+    @property
+    def n_observations(self) -> int:
+        return len(self._obs)
+
+    def observe(self, weights, seconds: float) -> None:
+        """Record one ``(4-weight row, seconds)`` observation.
+
+        β-weights must already be in the prior's data unit (bytes when
+        the prior is) — :meth:`observe_candidate` handles the row→byte
+        conversion for dataplane candidates.
+        """
+        w = tuple(float(v) for v in weights)
+        if len(w) != 4:
+            raise ValueError(f"need 4 weights, got {len(w)}")
+        if seconds < 0 or not math.isfinite(seconds):
+            raise ValueError(f"bad measurement: {seconds}")
+        self._obs.append((w, float(seconds)))
+
+    def observe_candidate(self, candidate, seconds: float,
+                          row_bytes: int = 1) -> None:
+        """Selector entry point: decompose the candidate at the prior
+        (scaled into the candidate's row units so the decomposition
+        lands in the linear piece the selection actually operates in),
+        then store byte-unit weights."""
+        rb = max(1, int(row_bytes))
+        at = self.prior.scale_data(rb) if rb != 1 else self.prior
+        na_i, nb_i, na_d, nb_d = hierarchical_weights(
+            candidate.cost_fn, at)
+        self.observe((na_i, nb_i * rb, na_d, nb_d * rb), seconds)
+
+    def fitted(self) -> HierarchicalCostParams:
+        """Solve the 4-parameter least squares with the ridge prior."""
+        A_rows = [list(w) for w, _ in self._obs]
+        t_rows = [t for _, t in self._obs]
+        x0 = (self.prior.ici.alpha, self.prior.ici.beta,
+              self.prior.dcn.alpha, self.prior.dcn.beta)
+        if self.prior_weight > 0:
+            s = math.sqrt(self.prior_weight)
+            for j in range(4):
+                # pseudo-observation per column at the column's mean
+                # coefficient scale; a column no observation touches
+                # falls back to scale 1 so it stays pinned to the prior
+                col = [abs(r[j]) for r in A_rows]
+                scale = (sum(col) / len(col) if col else 1.0) or 1.0
+                row = [0.0] * 4
+                row[j] = s * scale
+                A_rows.append(row)
+                t_rows.append(s * scale * x0[j])
+        A = np.asarray(A_rows, np.float64)
+        t = np.asarray(t_rows, np.float64)
+        sol, *_ = np.linalg.lstsq(A, t, rcond=None)
+        a_i, b_i, a_d, b_d = (float(v) for v in sol)
+        tu, du = self.prior.time_unit, self.prior.data_unit
+        return HierarchicalCostParams(
+            CostParams(max(0.0, a_i), max(1e-15, b_i), tu, du),
+            CostParams(max(0.0, a_d), max(1e-15, b_d), tu, du),
+            self.prior.topology)

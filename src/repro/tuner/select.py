@@ -79,8 +79,15 @@ def select(candidates: list[Candidate], params: CostParams,
             raced.append((cand.name, t))
             metric[cand.name] = t
             if calibrator is not None:
-                na, nb = cand.alpha_beta_weights()
-                calibrator.observe(na, nb, t)
+                # calibrators that can decompose the candidate themselves
+                # (hierarchical 4-weight rows, row→byte scaling) get the
+                # whole candidate; the legacy 2-weight path is kept for
+                # bare observe() implementations
+                if hasattr(calibrator, "observe_candidate"):
+                    calibrator.observe_candidate(cand, t)
+                else:
+                    na, nb = cand.alpha_beta_weights()
+                    calibrator.observe(na, nb, t)
         measured = tuple(raced)
         winner = min(raced, key=lambda nt: (nt[1], nt[0]))[0]
         best_cost, best = by_name[winner]

@@ -33,12 +33,29 @@ Hierarchical meshes: pass ``topology=HostTopology(hosts, dev_per_host)``
 :class:`~repro.tuner.calibrate.HierarchicalCalibration` — the service
 then races the two-level schedules against the flat ones under per-link
 (α, β) and keys the plan cache by the host split, so a 2x4 and a 4x2
-machine never share plans.
+machine never share plans.  Hierarchical races refit online through a
+:class:`~repro.tuner.calibrate.HierarchicalOnlineCalibrator` (one
+4-weight observation per race), so per-axis observations are kept, not
+dropped.
+
+Telemetry (``repro.obs``): every service owns a metrics
+:class:`~repro.obs.metrics.Registry` (cache hits, compiled LRU traffic,
+races, executions), per-link-class residual ledgers comparing each
+EXECUTED collective's measured seconds against its model prediction,
+and a :class:`~repro.obs.guidelines_monitor.GuidelineMonitor` checking
+the paper's G2–G4 bounds live.  A residual ledger's CUSUM detector
+firing triggers :meth:`refit_from_residuals`: (α, β) are refit per link
+class from the post-shift observations and ``params_epoch`` is bumped —
+the epoch is part of every :class:`~repro.tuner.cache.PlanKey`, so all
+plans selected under the stale model stop resolving at once.  When
+``repro.obs.trace`` is enabled, planning and execution emit spans
+(predicted per-stage breakdown included) for the Chrome-trace exporter;
+tracing off costs one ``None`` check.
 """
 from __future__ import annotations
 
+import time
 import uuid
-import warnings
 from collections import OrderedDict
 from dataclasses import dataclass
 
@@ -46,11 +63,17 @@ import numpy as np
 
 from repro.core.costmodel import (CostParams, HierarchicalCostParams,
                                   HostTopology)
+from repro.obs import trace as obs_trace
+from repro.obs.guidelines_monitor import GuidelineMonitor
+from repro.obs.metrics import Registry
+from repro.obs.residuals import DriftDetector, ResidualLedger
 
 from .cache import (PlanCache, PlanKey, mesh_fingerprint, quantize_matrix,
                     quantize_sizes)
-from .calibrate import Calibration, HierarchicalCalibration, OnlineCalibrator
-from .candidates import OPS, enumerate_candidates
+from .calibrate import (Calibration, HierarchicalCalibration,
+                        HierarchicalOnlineCalibrator, OnlineCalibrator,
+                        flat_weights, hierarchical_weights)
+from .candidates import OPS, enumerate_candidates, plan_pipeline_cost
 from .select import Selection, select
 
 
@@ -77,12 +100,16 @@ class _RowScaledCalibrator:
     row width before recording, so the fitted beta stays seconds-per-byte
     instead of compounding row_bytes on every refit."""
 
-    def __init__(self, inner: OnlineCalibrator, row_bytes: int):
+    def __init__(self, inner, row_bytes: int):
         self._inner = inner
         self._row_bytes = int(row_bytes)
 
     def observe(self, n_alpha: float, n_beta: float, seconds: float) -> None:
         self._inner.observe(n_alpha, n_beta * self._row_bytes, seconds)
+
+    def observe_candidate(self, candidate, seconds: float) -> None:
+        self._inner.observe_candidate(candidate, seconds,
+                                      row_bytes=self._row_bytes)
 
 
 class PlannerService:
@@ -106,8 +133,16 @@ class PlannerService:
                  wave_bins=(2.0,),
                  hysteresis: float = 0.05,
                  measure=None, top_k: int = 3,
-                 calibrator: OnlineCalibrator | None = None,
-                 topology: HostTopology | None = None):
+                 calibrator=None,
+                 topology: HostTopology | None = None,
+                 metrics: Registry | None = None,
+                 guideline_slack: float = 1.25,
+                 drift_k: float = 0.5, drift_h: float = 4.0,
+                 drift_warmup: int = 8,
+                 max_residuals: int = 512,
+                 refit_window: int = 8,
+                 refit_prior_weight: float = 4.0,
+                 auto_refit: bool = True):
         self.mesh = mesh
         self.axis = axis_name
         self.quantum = int(quantum)
@@ -153,17 +188,28 @@ class PlannerService:
         self.measure = measure
         self.top_k = int(top_k)
         self.calibrator = calibrator
+        hier = isinstance(self.params, HierarchicalCostParams)
         if calibrator is not None:
-            if isinstance(self.params, HierarchicalCostParams):
-                # the online refit is a 2-parameter (α, β) fit; per-axis
-                # refitting would need one ledger per link class — refit
-                # each axis offline (calibrate_axes) and rebuild instead
-                raise ValueError("online calibration is flat-only; refit "
-                                 "hierarchical axes via calibrate_axes and "
-                                 "rebuild the service")
-            # the refit loop rewrites self.params from the calibrator, so
-            # the starting params must already be in its units (s, bytes)
-            self.params.require_compatible(calibrator.prior.cost_params())
+            if hier:
+                if not isinstance(calibrator, HierarchicalOnlineCalibrator):
+                    raise ValueError(
+                        "hierarchical params need a "
+                        "HierarchicalOnlineCalibrator (the flat 2-weight "
+                        "ledger cannot attribute a race across two link "
+                        "classes)")
+                self.params.require_compatible(calibrator.prior)
+            else:
+                if isinstance(calibrator, HierarchicalOnlineCalibrator):
+                    raise ValueError("flat params with a hierarchical "
+                                     "calibrator — pass an OnlineCalibrator")
+                # the refit loop rewrites self.params from the calibrator,
+                # so the starting params must already be in its units
+                self.params.require_compatible(calibrator.prior.cost_params())
+        elif measure is not None and hier:
+            # hierarchical races used to measure candidates and then drop
+            # the observations from refitting (PR 6 counted the drop and
+            # warned once); a per-link-class calibrator keeps them
+            self.calibrator = HierarchicalOnlineCalibrator(self.params)
         # key token -> algo name; LRU-bounded alongside the plan cache
         self._incumbent: OrderedDict[str, str] = OrderedDict()
         self._compiled: OrderedDict[tuple, object] = OrderedDict()
@@ -171,11 +217,31 @@ class PlannerService:
         self.compiled_hits = 0
         self.compiled_misses = 0
         self.last_selection: Selection | None = None
-        # hierarchical mode cannot attach an OnlineCalibrator (the ctor
-        # above raises), so races still run but their observations refit
-        # nothing.  That drop used to be silent; count it and warn once.
+        # kept for stats() compatibility: always 0 now that hierarchical
+        # races refit through HierarchicalOnlineCalibrator
         self.dropped_refit_observations = 0
-        self._warned_dropped_refit = False
+        # ------------------------------------------------- telemetry plane
+        self.metrics = metrics if metrics is not None else Registry()
+        if self.cache.metrics is None:
+            self.cache.metrics = self.metrics
+        self.guidelines = GuidelineMonitor(slack=guideline_slack)
+        self.params_epoch = 0
+        self.drift_refits = 0
+        self.auto_refit = bool(auto_refit)
+        self.refit_window = int(refit_window)
+        self.refit_prior_weight = float(refit_prior_weight)
+        # one residual ledger per link class: drift is usually per-fabric,
+        # and per-class rows are what refit_from_residuals refits from
+        def _ledger(cls: str) -> ResidualLedger:
+            return ResidualLedger(cls, max_observations=max_residuals,
+                                  detector=DriftDetector(k=drift_k,
+                                                         h=drift_h,
+                                                         warmup=drift_warmup))
+        self.ledgers = ({"ici": _ledger("ici"), "dcn": _ledger("dcn")}
+                        if hier else {"flat": _ledger("flat")})
+        # the first call of a freshly jitted executable is dominated by
+        # XLA compilation; flag it so its time never enters the ledger
+        self._just_compiled = False
 
     # ------------------------------------------------------------ planning
 
@@ -192,7 +258,17 @@ class PlannerService:
             p = len(sig)
         return PlanKey(op, p, sig, -1 if root is None else int(root),
                        f"{dtype}r{int(row_bytes)}",
-                       mesh_fingerprint(self.mesh, self.topology))
+                       mesh_fingerprint(self.mesh, self.topology),
+                       epoch=self.params_epoch)
+
+    def _sel_params(self, row_bytes: int):
+        """Selection/prediction params in BYTES: per-row β scaled by the
+        row width (shared by planning, residual pricing, and tracing)."""
+        rb = max(1, int(row_bytes))
+        if isinstance(self.params, HierarchicalCostParams):
+            return self.params.scale_data(rb)
+        return CostParams(self.params.alpha, self.params.beta * rb,
+                          self.params.time_unit, "row")
 
     def plan_record(self, op: str, arg, root: int | None = None,
                     dtype: str = "float32", row_bytes: int = 1) -> PlanRecord:
@@ -206,15 +282,12 @@ class PlannerService:
         rec = self.cache.get(key)
         if rec is not None:
             return rec
+        tr = obs_trace.current()
+        t_plan = time.perf_counter()
         qarg = key.signature
         # selection params in bytes: scale the per-row β by the row width
         rb = max(1, int(row_bytes))
-        if isinstance(self.params, HierarchicalCostParams):
-            sel_params = self.params.scale_data(rb)
-        else:
-            sel_params = CostParams(self.params.alpha,
-                                    self.params.beta * rb,
-                                    self.params.time_unit, "row")
+        sel_params = self._sel_params(rb)
         cands = enumerate_candidates(op, qarg, root, sel_params,
                                      view="dataplane", buckets=self.buckets,
                                      segments=self.segments,
@@ -244,28 +317,29 @@ class PlannerService:
             self._incumbent.popitem(last=False)  # bounded like the plan cache
         if self.calibrator is not None and sel.measured:
             # online loop: the next selection uses the sharpened fit
-            self.params = self.calibrator.fitted().cost_params()
-        elif (sel.measured and self.calibrator is None
-              and isinstance(self.params, HierarchicalCostParams)):
-            # hierarchical mode races candidates but has no calibrator to
-            # record into (online refit is flat-only, see __init__); the
-            # measurements improve THIS selection yet refit nothing.
-            # Surface the drop instead of losing it silently.
-            self.dropped_refit_observations += len(sel.measured)
-            if not self._warned_dropped_refit:
-                self._warned_dropped_refit = True
-                warnings.warn(
-                    "hierarchical PlannerService measured "
-                    f"{len(sel.measured)} candidate(s) but online "
-                    "calibration is flat-only: observations are used for "
-                    "selection, then dropped from refitting (counted in "
-                    "stats()['dropped_refit_observations']).  Refit "
-                    "hierarchical axes offline via calibrate_axes.",
-                    RuntimeWarning, stacklevel=2)
+            # (HierarchicalOnlineCalibrator.fitted IS the params object;
+            # the flat Calibration wraps one).  Race-driven sharpening
+            # does NOT bump the params epoch — only drift does: the fit
+            # moves smoothly, cached plans stay honestly priced.
+            fit = self.calibrator.fitted()
+            self.params = (fit if isinstance(fit, HierarchicalCostParams)
+                           else fit.cost_params())
         rec = PlanRecord(op=op, plan=sel.candidate(cands).build(),
                          algo=sel.chosen, costs=sel.costs,
                          serial=uuid.uuid4().hex)
         self.cache.put(key, rec)
+        self.metrics.counter("plans_planned").inc()
+        if sel.measured:
+            self.metrics.counter("candidates_raced").inc(len(sel.measured))
+        if tr is not None:
+            tr.add_complete(
+                "plan/" + op, "planner", t_plan,
+                time.perf_counter() - t_plan,
+                op=op, p=key.p, token=key.token(), algo=sel.chosen,
+                cost=sel.cost, epoch=self.params_epoch,
+                row_bytes=rb, candidates=len(cands),
+                raced=[n for n, _ in sel.measured] if sel.measured else [],
+                kept_previous=sel.kept_previous)
         return rec
 
     def plan(self, op: str, arg, root: int | None = None,
@@ -309,8 +383,12 @@ class PlannerService:
         if fn is not None:
             self._compiled.move_to_end(ckey)
             self.compiled_hits += 1
+            self.metrics.counter("compiled_lru_hits").inc()
+            self._just_compiled = False
             return fn
         self.compiled_misses += 1
+        self.metrics.counter("compiled_lru_misses").inc()
+        self._just_compiled = True
         body = {"gatherv": jc.gatherv_shard, "scatterv": jc.scatterv_shard,
                 "allgatherv": jc.allgatherv_shard,
                 "alltoallv": jc.alltoallv_shard,
@@ -330,6 +408,252 @@ class PlannerService:
 
         return jax.device_put(x, NamedSharding(self.mesh, P(self.axis)))
 
+    # ----------------------------------------------------------- telemetry
+
+    def _run(self, op: str, rec: PlanRecord, fn, x, row_bytes: int,
+             arg=None, root: int | None = None) -> np.ndarray:
+        """Execute a compiled plan with the telemetry plane around it:
+        wall-clock timing, metrics, the exec trace span (with predicted
+        per-stage children), and the residual/guideline deposit."""
+        fresh = self._just_compiled
+        t0 = time.perf_counter()
+        out = np.asarray(fn(self._put(x)))
+        dt = time.perf_counter() - t0
+        self.metrics.counter("collectives_executed").inc()
+        self.metrics.histogram("exec_seconds").observe(dt)
+        tr = obs_trace.current()
+        if tr is not None:
+            self._emit_exec_span(tr, op, rec, t0, dt, row_bytes, fresh)
+        if not fresh:
+            # a freshly jitted executable's first call is dominated by XLA
+            # compilation — wall time says nothing about the fabric
+            self.record_execution(op, rec, dt, row_bytes=row_bytes,
+                                  arg=arg, root=root)
+        return out
+
+    def _emit_exec_span(self, tr, op: str, rec: PlanRecord, t0: float,
+                        dt: float, row_bytes: int, fresh: bool) -> None:
+        rb = max(1, int(row_bytes))
+        sel_params = self._sel_params(rb)
+        plan = rec.plan
+        breakdown = obs_trace.stage_breakdown(plan, sel_params)
+        predicted = sum(s["predicted_s"] for s in breakdown)
+        args = {"op": op, "algo": rec.algo, "serial": rec.serial,
+                "segments": getattr(plan, "segments", 1),
+                "num_stages": len(breakdown),
+                "predicted_s": predicted, "measured_s": dt,
+                "fresh_compile": fresh, "epoch": self.params_epoch,
+                "row_bytes": rb}
+        for cls, nbytes in obs_trace.plan_link_bytes(
+                plan.steps, self.topology, row_bytes=rb).items():
+            args[f"bytes_{cls}"] = nbytes
+        tr.add_complete("exec/" + op, "collective", t0, dt, **args)
+        # predicted per-stage children, laid proportionally under the
+        # measured window (the XLA program is opaque from the host — the
+        # stage timeline is the model's breakdown, and labeled so)
+        if len(breakdown) <= 128 and predicted > 0:
+            off = t0
+            for s in breakdown:
+                d = dt * s["predicted_s"] / predicted
+                tr.add_complete(f"stage/{s['stage']}", "stage-predicted",
+                                off, d, tid=1, steps=s["steps"],
+                                wave_payloads=s["wave_payloads"],
+                                predicted_s=s["predicted_s"])
+                off += d
+
+    def record_execution(self, op: str, rec: PlanRecord, measured_s: float,
+                         row_bytes: int = 1, arg=None,
+                         root: int | None = None) -> bool:
+        """Deposit one executed collective into the telemetry plane.
+
+        Prices the plan under the CURRENT byte-scaled params, records
+        the log(measured/predicted) residual — with the plan's
+        (α, β)-weight row — into the link class that dominates its
+        predicted time, and checks the paper guideline when the size
+        argument is supplied.  A detector fire triggers
+        :meth:`refit_from_residuals` when ``auto_refit`` is set.
+        Returns True iff drift was detected.  Benchmarks with model-
+        consistent synthetic measurements call this directly; the
+        execution methods call it with wall-clock seconds.
+        """
+        rb = max(1, int(row_bytes))
+        plan = rec.plan
+        tu = self.params.time_unit
+        if isinstance(self.params, HierarchicalCostParams):
+            # byte-unit cost closure: maps BYTE-unit params to the
+            # plan's predicted seconds (the row-width scaling lives
+            # inside), so refit iterations can re-derive weights at any
+            # candidate params without knowing the row width
+            def cost_fn(P, _plan=plan, _rb=rb):
+                return plan_pipeline_cost(_plan, P.scale_data(_rb))
+
+            predicted = float(cost_fn(self.params))
+            weights = hierarchical_weights(cost_fn, self.params)
+            ici_t = (weights[0] * self.params.ici.alpha
+                     + weights[1] * self.params.ici.beta)
+            dcn_t = (weights[2] * self.params.dcn.alpha
+                     + weights[3] * self.params.dcn.beta)
+            cls = "dcn" if dcn_t >= ici_t else "ici"
+        else:
+            def cost_fn(P, _plan=plan, _rb=rb, _tu=tu):
+                return plan_pipeline_cost(
+                    _plan, CostParams(P.alpha, P.beta * _rb, _tu, "row"))
+
+            predicted = float(cost_fn(self.params))
+            weights = flat_weights(cost_fn, self.params)
+            cls = "flat"
+        fired = self.ledgers[cls].record(op, predicted, float(measured_s),
+                                         weights, cost_fn=cost_fn)
+        self.metrics.counter("residuals_recorded").inc()
+        if arg is not None:
+            rep = self.guidelines.check(
+                op, arg, float(measured_s), self.params,
+                root=0 if root is None else int(root), row_bytes=rb)
+            if rep is not None and not rep["ok"]:
+                self.metrics.counter("guideline_violations").inc()
+        if fired:
+            self.metrics.counter("drift_detected").inc()
+            tr = obs_trace.current()
+            if tr is not None:
+                tr.instant("drift/" + cls, "drift", op=op, link_class=cls,
+                           predicted_s=predicted,
+                           measured_s=float(measured_s))
+            if self.auto_refit:
+                self.refit_from_residuals()
+        return fired
+
+    def refit_from_residuals(self) -> None:
+        """Drift response: refit (α, β) from the post-shift residual rows
+        and bump ``params_epoch``.
+
+        The epoch is part of every PlanKey, so the bump invalidates all
+        cached plans priced under the stale model at once — the next
+        request replans (and re-selects) under the refit parameters.
+        The refit pools the most recent ``refit_window`` rows of every
+        ledger (post-shift measurements — older ones described the old
+        regime) into the matching online calibrator with the CURRENT
+        params as ridge prior, so an axis the rows do not constrain
+        stays pinned instead of drifting to zero.
+        """
+        resids = []
+        for led in self.ledgers.values():
+            take = self.refit_window
+            shift = led.detector.last_run_length
+            if shift:
+                # the fired ledger truncates to the CUSUM changepoint
+                # estimate: rows from before the shift describe the old
+                # regime, and least squares is not robust to them
+                take = min(take, shift)
+            resids.extend(led.recent(take))
+        hier = isinstance(self.params, HierarchicalCostParams)
+
+        def _fit_from(start):
+            # iterated reweighted fit: each pass re-derives every
+            # residual's weight row AT the current iterate (a large
+            # shift moves plans into a different linear piece, so the
+            # row stored at record time misprices the new regime).  The
+            # ridge prior stays anchored at the PRE-refit params: a
+            # window of same-shaped plans has near-collinear weight
+            # rows, and the anchor keeps the axes the data cannot
+            # identify at their last calibrated value.
+            params = start
+            for _ in range(3):
+                if hier:
+                    cal = HierarchicalOnlineCalibrator(
+                        self.params, prior_weight=self.refit_prior_weight)
+                    for r in resids:
+                        if r.cost_fn is not None:
+                            cal.observe(
+                                hierarchical_weights(r.cost_fn, params),
+                                r.measured_s)
+                        elif len(r.weights) == 4:
+                            cal.observe(r.weights, r.measured_s)
+                    params = cal.fitted()
+                else:
+                    prior = Calibration(self.params.alpha,
+                                        self.params.beta,
+                                        r2=1.0, n_samples=0,
+                                        backend="drift-refit")
+                    cal = OnlineCalibrator(
+                        prior, prior_weight=self.refit_prior_weight)
+                    for r in resids:
+                        if r.cost_fn is not None:
+                            na, nb = flat_weights(r.cost_fn, params)
+                            cal.observe(na, nb, r.measured_s)
+                        elif len(r.weights) == 2:
+                            cal.observe(r.weights[0], r.weights[1],
+                                        r.measured_s)
+                    fit = cal.fitted()
+                    params = CostParams(fit.alpha_s, fit.beta_s_per_byte,
+                                        self.params.time_unit,
+                                        self.params.data_unit)
+            return params
+
+        def _sse(params):
+            # prediction error under the candidate fit, evaluated with
+            # the full piecewise cost (piece-aware, unlike the rows)
+            e, n = 0.0, 0
+            for r in resids:
+                if r.cost_fn is None:
+                    continue
+                d = float(r.cost_fn(params)) - r.measured_s
+                e += d * d
+                n += 1
+            return e if n else float("inf")
+
+        # the iteration is only locally convergent: a fit biased by
+        # stale-piece rows can sit in a self-consistent wrong piece.
+        # Multi-start it from each axis scaled by the observed mean
+        # ratio (a multiplicative drift hypothesis per axis) and keep
+        # the converged fit that best predicts the actual measurements.
+        ratio = float(np.exp(np.mean([r.log_ratio for r in resids]))
+                      if resids else 1.0)
+        cur = self.params
+        if hier:
+            tu, du = cur.time_unit, cur.data_unit
+
+            def _scaled(si, sd):
+                return HierarchicalCostParams(
+                    CostParams(cur.ici.alpha * si, cur.ici.beta * si,
+                               tu, du),
+                    CostParams(cur.dcn.alpha * sd, cur.dcn.beta * sd,
+                               tu, du), cur.topology)
+
+            starts = [cur, _scaled(ratio, 1.0), _scaled(1.0, ratio),
+                      _scaled(ratio, ratio)]
+        else:
+            starts = [cur,
+                      CostParams(cur.alpha * ratio, cur.beta,
+                                 cur.time_unit, cur.data_unit),
+                      CostParams(cur.alpha, cur.beta * ratio,
+                                 cur.time_unit, cur.data_unit),
+                      CostParams(cur.alpha * ratio, cur.beta * ratio,
+                                 cur.time_unit, cur.data_unit)]
+        fits = [_fit_from(s) for s in starts]
+        self.params = min(fits, key=_sse)
+        self.params_epoch += 1
+        self.drift_refits += 1
+        if self.calibrator is not None:
+            # rebase the race calibrator too: its old prior (and pre-drift
+            # observations) describe the dead regime and would drag the
+            # next race-driven fit straight back to it
+            if isinstance(self.calibrator, HierarchicalOnlineCalibrator):
+                self.calibrator = HierarchicalOnlineCalibrator(
+                    self.params, self.calibrator.prior_weight)
+            else:
+                self.calibrator = OnlineCalibrator(
+                    Calibration(self.params.alpha, self.params.beta,
+                                r2=1.0, n_samples=0, backend="drift-refit"),
+                    self.calibrator.prior_weight)
+        for led in self.ledgers.values():
+            led.reset_after_refit()
+        self.metrics.counter("drift_refits").inc()
+        self.metrics.gauge("params_epoch").set(self.params_epoch)
+        tr = obs_trace.current()
+        if tr is not None:
+            tr.instant("refit/epoch_bump", "drift",
+                       epoch=self.params_epoch)
+
     def gatherv(self, blocks: list[np.ndarray], root: int):
         """Gather ragged blocks to ``root``; returns (result, plan) — the
         result rows are the true (unquantized) blocks in rank order."""
@@ -344,7 +668,8 @@ class PlannerService:
         x = np.zeros((plan.p, plan.cap, F), dt)
         for i, b in enumerate(blocks):
             x[i, : sizes[i]] = b
-        out = np.asarray(fn(self._put(x.reshape(plan.p * plan.cap, F))))
+        out = self._run("gatherv", rec, fn, x.reshape(plan.p * plan.cap, F),
+                        row_bytes=F * dt.itemsize, arg=sizes, root=root)
         out = out.reshape(plan.p, plan.buf_rows, F)
         res, off = [], 0
         for i, s in enumerate(sizes):
@@ -369,7 +694,9 @@ class PlannerService:
             xin[root, off_q: off_q + s] = data[off_true: off_true + s]
             off_true += s
             off_q += plan.sizes[i]
-        out = np.asarray(fn(self._put(xin.reshape(plan.p * plan.buf_rows, F))))
+        out = self._run("scatterv", rec, fn,
+                        xin.reshape(plan.p * plan.buf_rows, F),
+                        row_bytes=F * dt.itemsize, arg=sizes, root=root)
         out = out.reshape(plan.p, plan.cap, F)
         return [out[i, : sizes[i]] for i in range(plan.p)], plan
 
@@ -387,7 +714,9 @@ class PlannerService:
         x = np.zeros((plan.p, plan.cap, F), dt)
         for i, b in enumerate(blocks):
             x[i, : sizes[i]] = b
-        out = np.asarray(fn(self._put(x.reshape(plan.p * plan.cap, F))))
+        out = self._run("allgatherv", rec, fn,
+                        x.reshape(plan.p * plan.cap, F),
+                        row_bytes=F * dt.itemsize, arg=sizes)
         out = out.reshape(plan.p, plan.buf_rows, F)
         keep = []
         for i, s in enumerate(sizes):
@@ -415,7 +744,8 @@ class PlannerService:
             for j, b in enumerate(row):
                 x[i, off: off + S[i][j]] = b
                 off += Sq[i, j]
-        out = np.asarray(fn(self._put(x.reshape(p * plan.cap, F))))
+        out = self._run("alltoallv", rec, fn, x.reshape(p * plan.cap, F),
+                        row_bytes=F * dt.itemsize, arg=S)
         out = out.reshape(p, plan.out_rows, F)
         res = []
         for j in range(p):
@@ -450,7 +780,9 @@ class PlannerService:
                 x[i, off_q: off_q + s] = c[off_true: off_true + s]
                 off_true += s
                 off_q += plan.sizes[j]    # quantized stride
-        out = np.asarray(fn(self._put(x.reshape(p * plan.in_rows, F))))
+        out = self._run("reduce_scatterv", rec, fn,
+                        x.reshape(p * plan.in_rows, F),
+                        row_bytes=F * dt.itemsize, arg=sizes)
         out = out.reshape(p, plan.cap, F)
         return [out[j, : sizes[j]] for j in range(p)], plan
 
@@ -474,7 +806,9 @@ class PlannerService:
                 x[i, off_q: off_q + s] = c[off_true: off_true + s]
                 off_true += s
                 off_q += plan.sizes[j]
-        out = np.asarray(fn(self._put(x.reshape(p * plan.in_rows, F))))
+        out = self._run("allreducev", rec, fn,
+                        x.reshape(p * plan.in_rows, F),
+                        row_bytes=F * dt.itemsize, arg=sizes)
         out = out.reshape(p, plan.buf_rows, F)
         keep, off_q = [], 0
         for j, s in enumerate(sizes):
@@ -498,4 +832,10 @@ class PlannerService:
                 "compiled_misses": self.compiled_misses,
                 "dropped_refit_observations":
                     self.dropped_refit_observations,
-                "params": params}
+                "params": params,
+                "params_epoch": self.params_epoch,
+                "drift_refits": self.drift_refits,
+                "residuals": {cls: led.stats()
+                              for cls, led in self.ledgers.items()},
+                "guidelines": self.guidelines.summary(),
+                "metrics": self.metrics.snapshot()}

@@ -286,7 +286,7 @@ def test_online_calibrator_rejected_with_hierarchical_params():
     from repro.tuner import Calibration, OnlineCalibrator
 
     prior = Calibration(1e-6, 2e-11, 1.0, 1, "t")
-    with pytest.raises(ValueError, match="flat-only"):
+    with pytest.raises(ValueError, match="HierarchicalOnlineCalibrator"):
         PlannerService(mesh=None, topology=topo, params=_hier(topo),
                        calibrator=OnlineCalibrator(prior))
 

@@ -347,11 +347,11 @@ def test_dtype_keys_separate_reduce_plans():
     assert again.serial == recs["float32"].serial
 
 
-def test_hierarchical_refit_drop_counted_and_warned_once():
-    """Satellite: a hierarchical service that races candidates has no
-    online calibrator to refit (flat-only); the dropped observations are
-    counted in stats() and warned about exactly once — and the
-    hierarchical params object is never corrupted by the race."""
+def test_hierarchical_refit_observations_kept_per_axis():
+    """Satellite (telemetry plane): hierarchical race observations used
+    to be measured and then DROPPED from refitting (warn-once in PR 6);
+    a per-link-class HierarchicalOnlineCalibrator now keeps every one of
+    them, nothing is dropped, and no warning fires."""
     topo = HostTopology(2, 4)
     hp = HierarchicalCostParams(
         CostParams(1e-6, 2e-11, "s", "byte"),
@@ -360,24 +360,33 @@ def test_hierarchical_refit_drop_counted_and_warned_once():
                                      beta_s_per_byte=2.5e-11, noise=0.0)
     svc = PlannerService(mesh=None, quantum=1, params=hp,
                          measure=machine.measure, top_k=2)
+    from repro.tuner import HierarchicalOnlineCalibrator
+    assert isinstance(svc.calibrator, HierarchicalOnlineCalibrator)
     with warnings.catch_warnings(record=True) as caught:
         warnings.simplefilter("always")
         svc.plan_record("reduce_scatterv", [3, 5, 2, 7, 1, 4, 6, 2])
         svc.plan_record("allgatherv", [2, 2, 9, 1, 5, 3, 8, 4])
-    hits = [w for w in caught if issubclass(w.category, RuntimeWarning)
-            and "flat-only" in str(w.message)]
-    assert len(hits) == 1, [str(w.message) for w in caught]
-    assert svc.stats["dropped_refit_observations"] >= 4  # 2 ops, top_k=2
-    assert svc.params is hp                    # ledger untouched
+    assert not [w for w in caught
+                if issubclass(w.category, RuntimeWarning)]
+    assert svc.calibrator.n_observations >= 4  # 2 ops, top_k=2: all kept
+    assert svc.stats["dropped_refit_observations"] == 0
+    # the race-driven refit sharpened the hierarchical fit in place —
+    # still per-link-class params over the SAME topology
+    assert isinstance(svc.params, HierarchicalCostParams)
+    assert svc.params.topology == topo
+    # sharpening alone never bumps the params epoch (that's drift's job)
+    assert svc.stats["params_epoch"] == 0
 
 
 def test_online_calibrator_rejected_in_hierarchical_mode():
+    """A flat 2-weight calibrator still cannot serve hierarchical params
+    — the service demands the 4-weight one."""
     topo = HostTopology(2, 4)
     hp = HierarchicalCostParams(
         CostParams(1e-6, 2e-11, "s", "byte"),
         CostParams(50e-6, 16e-11, "s", "byte"), topo)
     guess = Calibration(1e-6, 1e-11, r2=1.0, n_samples=1, backend="guess")
-    with pytest.raises(ValueError, match="flat-only"):
+    with pytest.raises(ValueError, match="HierarchicalOnlineCalibrator"):
         PlannerService(mesh=None, params=hp,
                        calibrator=OnlineCalibrator(guess))
 
