@@ -63,7 +63,7 @@ def write_summary(benches: dict[str, tuple], total_s: float,
 def main() -> None:
     from . import extensions_bench, guidelines_bench, jax_runtime, \
         moe_dispatch, moe_e2e, paper_tables, pipeline_bench, roofline, \
-        tuner_bench, variants
+        serve_bench, tuner_bench, variants
     t0 = time.time()
     print("name,us_per_call,derived")
     benches: dict[str, tuple] = {}
@@ -75,6 +75,7 @@ def main() -> None:
     benches["tuner"] = tuner_bench.run(synthetic=True)
     benches["pipeline"] = pipeline_bench.run()
     benches["moe_e2e"] = moe_e2e.run()
+    benches["serve"] = serve_bench.run()
     benches["jax_runtime"] = jax_runtime.run()
     benches["roofline"] = roofline.run()
     total = time.time() - t0

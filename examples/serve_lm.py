@@ -1,5 +1,11 @@
 """Serving example: batched prefill + decode with ragged prompt lengths
-(continuous-batching-lite) on the hybrid recurrentgemma family.
+(continuous-batching-lite) on the hybrid recurrentgemma family, with the
+decode loop's MoE dispatch/combine planned through the serving dataplane
+(signature classes -> cached plans, replan-free in steady state).
+
+Request arrivals replay the shared seeded diurnal trace
+(``benchmarks.common.serve_trace``), the same fixture
+``benchmarks/serve_bench.py`` and the churn test stream.
 
     PYTHONPATH=src python examples/serve_lm.py
 """
@@ -10,9 +16,11 @@ import sys
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 env = dict(os.environ)
-env["PYTHONPATH"] = os.path.join(ROOT, "src")
+# src for the repro package, repo root for benchmarks.common (trace fixture)
+env["PYTHONPATH"] = os.pathsep.join([os.path.join(ROOT, "src"), ROOT])
 subprocess.run(
     [sys.executable, "-m", "repro.launch.serve",
      "--arch", "recurrentgemma-2b", "--reduced",
-     "--requests", "8", "--batch", "4", "--prompt-len", "24", "--gen", "16"],
+     "--requests", "8", "--batch", "4", "--prompt-len", "24", "--gen", "16",
+     "--experts", "4", "--top-k", "2", "--trace-replay"],
     env=env, check=True)

@@ -19,10 +19,17 @@ schedules:
 * :mod:`~repro.tuner.service` — :class:`PlannerService`, the six ops'
   serving front end — gatherv/scatterv/allgatherv/alltoallv plus the
   reduction collectives reduce_scatterv/allreducev (the old
-  ``RaggedGathervPlanner`` is now a shim over it).
+  ``RaggedGathervPlanner`` is now a shim over it);
+* :mod:`~repro.tuner.classifier` / :mod:`~repro.tuner.serving` — the
+  decode-time continuous-batching layer: raw per-step size vectors map
+  onto bounded padded signature classes (padding priced under α-β,
+  overhead ≤ a configured bound), predicted next classes are planned
+  and compiled off the hot path, and the steady-state serving loop is
+  replan- and recompile-free.
 """
 from .cache import (CACHE_VERSION, PlanCache, PlanKey,  # noqa: F401
                     mesh_fingerprint, quantize_matrix, quantize_sizes)
+from .classifier import SignatureClassifier  # noqa: F401
 from .calibrate import (Calibration, HierarchicalCalibration,  # noqa: F401
                         HierarchicalOnlineCalibrator, MeshTimingBackend,
                         OnlineCalibrator, SyntheticHierarchicalBackend,
@@ -33,3 +40,4 @@ from .candidates import (Candidate, OPS,  # noqa: F401
                          plan_step_cost)
 from .select import Selection, argmin_name, select  # noqa: F401
 from .service import PlanRecord, PlannerService  # noqa: F401
+from .serving import ServingPlanner, SignaturePredictor  # noqa: F401

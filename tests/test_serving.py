@@ -1,0 +1,285 @@
+"""Serving dataplane tests: signature classes, padding round trips,
+steady-state churn, and the batch-draining regression.
+
+Four groups (ISSUE: serving-scale dataplane):
+
+* ``pop_batch`` — the continuous-batching drain must never pop past the
+  queue end (the old ``min(batch, len(queue) + 1)`` raised IndexError
+  on non-divisible queue sizes, e.g. ``--requests 6 --batch 4``);
+* classifier properties — the priced padding overhead stays within the
+  configured bound on adversarial (zipf, single-hot, all-zero) streams,
+  and the class grid stays logarithmic;
+* round trips — class padding NEVER corrupts payloads: padded rows
+  round-trip to exact bytes through gatherv/alltoallv, and to exact
+  sums through reduce_scatterv (padded rows are zeros on every rank —
+  the PR 6 zero-sum guard makes the true sums exact);
+* steady-state churn — ≥500 consecutive decode-step signatures from the
+  seeded diurnal trace plan with ZERO hot-path cache misses and zero
+  compiles, the plan cache stays bounded, and a ``params_epoch`` bump
+  invalidates every signature class exactly once.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from benchmarks.common import (moe_dispatch_matrix, moe_load_fractions,
+                               serve_trace)
+from repro.core.costmodel import CostParams
+from repro.tuner import (PlannerService, ServingPlanner,
+                         SignatureClassifier, SignaturePredictor)
+
+
+# ------------------------------------------------------------ batch drain
+
+def test_pop_batch_never_overdrains():
+    from repro.launch.serve import pop_batch
+
+    for requests in range(1, 12):
+        for batch in range(1, 6):
+            queue = list(range(requests))
+            seen = []
+            while queue:
+                got = pop_batch(queue, batch)
+                assert 0 < len(got) <= batch
+                seen.extend(got)
+            assert seen == list(range(requests))
+
+
+def test_pop_batch_regression_6_requests_batch_4():
+    # the exact crash case: 6 requests, batch 4 → second drain must pop
+    # 2, not 3 (min(batch, len+1) popped past the end)
+    from repro.launch.serve import pop_batch
+
+    queue = list(range(6))
+    assert len(pop_batch(queue, 4)) == 4
+    assert len(pop_batch(queue, 4)) == 2
+    assert queue == []
+
+
+# ------------------------------------------------------- classifier bound
+
+def test_classifier_bound_on_adversarial_streams():
+    p = 16
+    cls = SignatureClassifier(row_bytes=2048, max_overhead=0.25)
+    rng = np.random.default_rng(0)
+    for shape in ("zipf", "single_hot", "uniform"):
+        for tokens in (128, 4_096, 65_536):
+            S = moe_dispatch_matrix(p, tokens, shape)
+            sig = cls.classify_matrix(S)
+            assert cls.price_overhead(S, sig) <= 0.25 + 1e-12
+            n = np.maximum(0, (moe_load_fractions(p, shape) * tokens)
+                           ).astype(np.int64)
+            sigv = cls.classify(n)
+            assert cls.price_overhead(n, sigv) <= 0.25 + 1e-12
+        # jittered: the bound is per-signature, not just per-shape
+        S = moe_dispatch_matrix(p, 4096, shape)
+        for _ in range(10):
+            J = np.maximum(0, S + rng.integers(-3, 4, S.shape))
+            assert cls.price_overhead(J, cls.classify_matrix(J)) \
+                <= 0.25 + 1e-12
+
+
+def test_classifier_all_zero_stream():
+    cls = SignatureClassifier(row_bytes=512, max_overhead=0.25)
+    z = [0] * 8
+    assert cls.classify(z) == tuple(z)          # its own class
+    assert cls.price_overhead(z, cls.classify(z)) == 0.0
+    Z = np.zeros((4, 4), np.int64)
+    assert cls.classify_matrix(Z) == tuple((0,) * 4 for _ in range(4))
+
+
+@given(st.lists(st.integers(min_value=0, max_value=200_000),
+                min_size=1, max_size=64))
+@settings(max_examples=120, deadline=None)
+def test_classifier_bound_property(sizes):
+    cls = SignatureClassifier(row_bytes=4096, max_overhead=0.2)
+    sig = cls.classify(sizes)
+    assert all(q >= s for q, s in zip(sig, sizes))     # always covers
+    assert cls.price_overhead(sizes, sig) <= 0.2 + 1e-12
+    # idempotent: classes are fixed points
+    assert cls.classify(sig) == sig
+
+
+def test_classifier_grid_is_logarithmic():
+    cls = SignatureClassifier(row_bytes=2048, max_overhead=0.25)
+    # ~log_{1.25} of the size range, NOT linear: bounds the plan cache
+    assert cls.class_count(10 ** 6) < 80
+    assert cls.class_count(10 ** 6) > cls.class_count(10 ** 3)
+
+
+def test_predictor_last_k_and_mean():
+    pred = SignaturePredictor(k=2, ewma=0.5)
+    pred.observe([4, 4], (6, 6))
+    pred.observe([8, 8], (12, 12))
+    pred.observe([8, 8], (12, 12))
+    assert pred.predict() == [(12, 12), (6, 6)]
+    pred.observe([16, 16], (24, 24))          # k=2: (6, 6) evicted
+    assert pred.predict() == [(24, 24), (12, 12)]
+    assert pred.mean is not None and pred.mean.shape == (2,)
+    assert np.all(pred.mean >= 4) and np.all(pred.mean <= 16)
+
+
+def test_serving_requires_quantum_one():
+    svc = PlannerService(mesh=None, quantum=64)
+    with pytest.raises(ValueError):
+        ServingPlanner(svc)
+    svc1 = PlannerService(mesh=None, quantum=1)
+    with pytest.raises(ValueError):            # grid looser than bound
+        ServingPlanner(svc1, classifier=SignatureClassifier(
+            max_overhead=0.5), max_overhead=0.25)
+
+
+# ------------------------------------------------------------ round trips
+
+@st.composite
+def ragged_blocks(draw):
+    p = draw(st.sampled_from([4, 8]))
+    sizes = [draw(st.integers(min_value=0, max_value=40)) for _ in range(p)]
+    return p, sizes
+
+
+@given(ragged_blocks())
+@settings(max_examples=20, deadline=None)
+def test_gatherv_class_padding_round_trips_bytes(ps):
+    p, sizes = ps
+    rng = np.random.default_rng(sum(sizes) + p)
+    svc = PlannerService(mesh=None, quantum=1)
+    sp = ServingPlanner(svc, max_overhead=0.25, row_bytes=64)
+    blocks = [rng.integers(-2 ** 40, 2 ** 40, (s, 8)).astype(np.int64)
+              for s in sizes]
+    out, plan = sp.gatherv(blocks, root=rng.integers(0, p))
+    assert out.tobytes() == np.concatenate(blocks, axis=0).tobytes()
+
+
+@given(ragged_blocks())
+@settings(max_examples=20, deadline=None)
+def test_alltoallv_class_padding_round_trips_bytes(ps):
+    p, sizes = ps
+    rng = np.random.default_rng(sum(sizes) + 2 * p)
+    svc = PlannerService(mesh=None, quantum=1)
+    sp = ServingPlanner(svc, max_overhead=0.25, row_bytes=64)
+    S = rng.integers(0, 12, (p, p)).astype(np.int64)
+    blocks = [[rng.integers(-2 ** 40, 2 ** 40, (int(S[i, j]), 8)
+                            ).astype(np.int64)
+               for j in range(p)] for i in range(p)]
+    res, plan = sp.dispatch(blocks)
+    for j in range(p):
+        want = np.concatenate([blocks[i][j] for i in range(p)], axis=0)
+        assert res[j].tobytes() == want.tobytes()
+
+
+@given(ragged_blocks())
+@settings(max_examples=20, deadline=None)
+def test_reduce_scatterv_class_padding_sums_exact(ps):
+    """Padded rows are zeros on EVERY rank, so the true-segment sums are
+    bit-exact (small ints in float32 sum without rounding)."""
+    p, sizes = ps
+    rng = np.random.default_rng(sum(sizes) + 3 * p)
+    svc = PlannerService(mesh=None, quantum=1)
+    sp = ServingPlanner(svc, max_overhead=0.25, row_bytes=64)
+    total = sum(sizes)
+    contribs = [rng.integers(-8, 8, (total, 8)).astype(np.float32)
+                for _ in range(p)]
+    outs, plan = sp.combine(contribs, sizes)
+    want = np.sum(contribs, axis=0)
+    off = 0
+    for j, s in enumerate(sizes):
+        assert np.array_equal(outs[j], want[off: off + s])
+        assert outs[j].shape == (s, 8)
+        off += s
+
+
+def test_round_trip_across_signature_switches():
+    """The same planner, a drifting stream: every step must round-trip
+    exactly even while classes switch underneath."""
+    p = 4
+    rng = np.random.default_rng(7)
+    svc = PlannerService(mesh=None, quantum=1)
+    sp = ServingPlanner(svc, max_overhead=0.25, row_bytes=64)
+    for scale in (2, 20, 5, 60, 1, 35):
+        S = rng.integers(0, scale, (p, p)).astype(np.int64)
+        blocks = [[rng.integers(-99, 99, (int(S[i, j]), 4)).astype(np.int64)
+                   for j in range(p)] for i in range(p)]
+        res, _ = sp.dispatch(blocks)
+        for j in range(p):
+            want = np.concatenate([blocks[i][j] for i in range(p)], axis=0)
+            assert res[j].tobytes() == want.tobytes()
+    assert sp.overhead_max <= 0.25 + 1e-12
+
+
+# ------------------------------------------------- steady-state churn
+
+CHURN_STEPS = 1000
+CHURN_SEED = 0
+CHURN_ROW_BYTES = 512
+CHURN_TRACE = dict(base_qps=8.0, diurnal_amp=0.6, period=128,
+                   max_batch=1024, mean_decode_len=48, top_k=4)
+
+
+def _run_churn():
+    trace = serve_trace(8, CHURN_STEPS, seed=CHURN_SEED, **CHURN_TRACE)
+    svc = PlannerService(mesh=None, quantum=1, params=CostParams.tpu_ici(),
+                         max_cached_plans=1024)
+    sp = ServingPlanner(svc, max_overhead=0.25, row_bytes=CHURN_ROW_BYTES)
+    miss_at = []
+    for st_ in trace:
+        m0 = sp.hot_misses
+        sp.plan_step("alltoallv", st_["S"], row_bytes=CHURN_ROW_BYTES)
+        sp.plan_step("reduce_scatterv", [int(v) for v in st_["n"]],
+                     row_bytes=CHURN_ROW_BYTES)
+        if sp.hot_misses > m0:
+            miss_at.append(st_["step"])
+        sp.prefetch()
+    return trace, svc, sp, miss_at
+
+
+def test_churn_steady_state_is_replan_free():
+    trace, svc, sp, miss_at = _run_churn()
+    # longest run of decode steps with zero hot-path plan-cache misses
+    pts = [-1] + miss_at + [CHURN_STEPS]
+    length = max(b - a - 1 for a, b in zip(pts, pts[1:]))
+    assert length >= 500, (length, miss_at)
+    # plan-only service: nothing ever compiles
+    assert sp.compiles == 0
+    # the classifier keeps the padding priced within the bound throughout
+    assert sp.overhead_max <= 0.25 + 1e-12
+    # the class space (and so the plan cache) stays bounded under churn:
+    # ~2 ops x tens of ladder rungs, NOT one per raw signature
+    assert len(sp.classes_seen) < 128, len(sp.classes_seen)
+    assert svc.plan_misses < 256, svc.plan_misses
+    stats = sp.stats()
+    assert stats["plan_hits"] > 10 * stats["plan_misses"]
+    # prefetch did real work: some classes were planned off the hot path
+    # before their first hot use
+    assert stats["prefetch_hits"] > 0
+
+
+def test_params_epoch_bump_invalidates_each_class_once():
+    trace, svc, sp, _ = _run_churn()
+    # replay a steady window; track the distinct classes it touches
+    window = trace[300:400]
+
+    def replay():
+        used = set()
+        h0 = sp.hot_misses
+        for st_ in window:
+            sp.plan_step("alltoallv", st_["S"], row_bytes=CHURN_ROW_BYTES)
+            used.add(("alltoallv", sp._current["alltoallv"]))
+            sp.plan_step("reduce_scatterv", [int(v) for v in st_["n"]],
+                         row_bytes=CHURN_ROW_BYTES)
+            used.add(("reduce_scatterv", sp._current["reduce_scatterv"]))
+        return used, sp.hot_misses - h0
+
+    used0, miss0 = replay()
+    assert miss0 == 0                      # fully warm before the bump
+    epoch0 = svc.params_epoch
+    svc.params_epoch += 1                  # the drift-refit path's effect
+    used1, miss1 = replay()
+    # every class the window touches replans EXACTLY once per epoch...
+    assert used1 == used0
+    assert miss1 == len(used1), (miss1, len(used1))
+    used2, miss2 = replay()
+    # ...and the very next pass is replan-free again
+    assert miss2 == 0
+    assert used2 == used0
+    assert svc.params_epoch == epoch0 + 1
