@@ -1,0 +1,294 @@
+"""Chaos bench: the fault-aware runtime driven through scripted faults.
+
+Three legs, all deterministic (seeded ``FaultSchedule``, NumPy oracle —
+no devices needed):
+
+* **degraded_link** — one host's links drop to 1/16 bandwidth.  A
+  fault-oblivious ``PlannerService`` and a fault-aware one (same
+  problem, ``update_link_health`` fed the ×16 factor) both plan the
+  gatherv; the bench asserts the aware plan's tree demotes the sick
+  rank to a STRUCTURAL leaf (no step delivers rows into it), beats the
+  oblivious plan by >= 1.2x bottleneck span on the degraded machine
+  (``pipeline.plan_host_times`` under the ``DegradedCostParams`` truth),
+  and stays byte-identical to the oblivious plan's gathered result
+  under the NumPy step oracle — routing around a fault never changes
+  the answer.
+
+* **host_loss** — a hard ``HostLoss`` at a chosen step: the elastic
+  shrink path rebuilds gatherv / allgatherv / alltoallv /
+  reduce_scatterv / allreducev over the surviving p-1 ranks
+  (``shrink_sizes`` / ``shrink_matrix`` / ``remap_root``) and the bench
+  asserts exact bytes and exact sums on the survivors.
+
+* **timeout_retry** — scripted ``TimeoutFault`` events through the host
+  drivers' deadline path (``call_with_deadline`` + fault hook): a
+  transient fault is absorbed by bounded retry; a persistent one
+  escalates to ``CollectiveTimeout`` and lands on the straggler ladder.
+
+Writes ``results/chaos_bench.json`` (schema: EXPERIMENTS.md §Chaos
+bench):
+
+    PYTHONPATH=src python benchmarks/chaos_bench.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+if __package__ in (None, ""):  # direct-script execution
+    _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for _p in (_REPO, os.path.join(_REPO, "src")):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
+    from benchmarks.common import emit
+else:
+    from .common import emit
+
+from repro.core import jax_collectives as jc
+from repro.core.costmodel import CostParams, DegradedCostParams
+from repro.core.pipeline import (execute_allreducev_plan_numpy,
+                                 execute_alltoallv_plan_numpy,
+                                 execute_reduce_scatterv_plan_numpy,
+                                 execute_steps_numpy, plan_host_times)
+from repro.runtime.chaos import (ExecutionFaultInjector, FaultSchedule,
+                                 HostLoss, LinkDegrade, TimeoutFault,
+                                 remap_root, shrink_matrix, shrink_sizes,
+                                 surviving_ranks)
+from repro.runtime.straggler import StragglerPolicy
+from repro.tuner import PlannerService
+
+RESULTS = os.path.join(os.environ.get("REPRO_RESULTS", os.getcwd()),
+                       "results")
+
+SCHEMA_VERSION = 1
+VICTIM = 2
+FACTOR = 16.0
+
+
+def _receives_into(steps, rank: int) -> int:
+    """Rows any step delivers INTO ``rank`` — 0 iff it is a structural
+    leaf of the executed schedule (sends only)."""
+    rows = 0
+    for perm, _payload, _ss, _rs, recv_valid in steps:
+        for _s, d in perm:
+            if d == rank:
+                rows += int(recv_valid[d])
+    return rows
+
+
+def _gather_oracle(plan, blocks, root: int, F: int):
+    p = plan.p
+    bufs = np.zeros((p, plan.buf_rows, F), np.int64)
+    for i, b in enumerate(blocks):
+        bufs[i, plan.offsets[i]: plan.offsets[i] + len(b)] = b
+    out = execute_steps_numpy(plan.steps, bufs)
+    return out[root, : plan.total]
+
+
+def degraded_link_leg(quick: bool) -> tuple[list, dict]:
+    """Replanning around a x16-degraded host: structure, speed, bytes."""
+    p = 8 if quick else 16
+    # the victim's neighbor holds a large block, so the oblivious
+    # free-cube merge makes the victim an interior receiver; its own
+    # block is large enough that forwarding it twice hurts
+    rng = np.random.default_rng(7)
+    m = [int(x) for x in rng.integers(8, 64, p)]
+    m[VICTIM] = 4000
+    m[VICTIM + 1] = 3000
+    root = 0
+    schedule = FaultSchedule.scripted(LinkDegrade(VICTIM, FACTOR, start=0))
+    truth_base = CostParams.tpu_ici()
+    truth = DegradedCostParams(truth_base, schedule.health_map(0))
+
+    oblivious = PlannerService(quantum=1)
+    aware = PlannerService(quantum=1)
+    changed = aware.update_link_health(
+        factors={VICTIM: FACTOR}, incident=("chaos", 0))
+    assert changed and aware.params_epoch == 1
+    rec_o = oblivious.plan_record("gatherv", m, root=root)
+    rec_a = aware.plan_record("gatherv", m, root=root)
+
+    # tree STRUCTURE: the aware plan never delivers rows into the victim
+    rows_in_o = _receives_into(rec_o.plan.steps, VICTIM)
+    rows_in_a = _receives_into(rec_a.plan.steps, VICTIM)
+    assert rows_in_a == 0, \
+        f"aware plan still routes {rows_in_a} rows into the victim"
+    assert rows_in_o > 0, "oblivious plan never stressed the victim " \
+        "(bench sizes need retuning)"
+
+    # step time on the DEGRADED machine: bottleneck-rank busy span
+    span_o = max(plan_host_times(rec_o.plan.steps, p, truth).values())
+    span_a = max(plan_host_times(rec_a.plan.steps, p, truth).values())
+    speedup = span_o / span_a
+    assert speedup >= 1.2, \
+        f"aware plan only {speedup:.2f}x over oblivious (need >= 1.2)"
+
+    # byte identity: both plans gather the same rows, exactly
+    F = 2
+    blocks = [rng.integers(0, 1_000_000, (s, F)) for s in m]
+    expect = np.concatenate(blocks, axis=0)
+    got_o = _gather_oracle(rec_o.plan, blocks, root, F)
+    got_a = _gather_oracle(rec_a.plan, blocks, root, F)
+    np.testing.assert_array_equal(got_o, expect)
+    np.testing.assert_array_equal(got_a, expect)
+
+    rows = [
+        (f"chaos/degraded_link_p{p}_oblivious", span_o * 1e6,
+         f"algo={rec_o.algo};rows_into_victim={rows_in_o}"),
+        (f"chaos/degraded_link_p{p}_aware", span_a * 1e6,
+         f"algo={rec_a.algo};rows_into_victim={rows_in_a};"
+         f"speedup={speedup:.2f}"),
+    ]
+    return rows, {
+        "p": p, "victim": VICTIM, "factor": FACTOR, "root": root,
+        "oblivious": {"algo": rec_o.algo, "span_s": span_o,
+                      "rows_into_victim": rows_in_o},
+        "aware": {"algo": rec_a.algo, "span_s": span_a,
+                  "rows_into_victim": rows_in_a,
+                  "params_epoch": aware.params_epoch,
+                  "link_health": aware.stats["link_health"]},
+        "speedup": speedup, "byte_identical": True,
+    }
+
+
+def host_loss_leg(quick: bool) -> tuple[list, dict]:
+    """Hard loss at step 2: every collective rebuilt over the survivors
+    with exact bytes / exact sums."""
+    p = 6 if quick else 8
+    loss_step = 2
+    schedule = FaultSchedule.scripted(HostLoss(VICTIM, loss_step))
+    rng = np.random.default_rng(11)
+    sizes = [int(x) for x in rng.integers(1, 40, p)]
+    root = 0
+    assert not schedule.lost_hosts(loss_step - 1)
+    survivors = surviving_ranks(p, schedule.lost_hosts(loss_step))
+    assert len(survivors) == p - 1 and VICTIM not in survivors
+    q = len(survivors)
+    ssizes = shrink_sizes(sizes, survivors)
+    sroot = remap_root(root, survivors)
+    svc = PlannerService(quantum=1)
+    F = 2
+    blocks = [rng.integers(0, 1_000_000, (s, F)) for s in ssizes]
+    expect = np.concatenate(blocks, axis=0)
+    checked = []
+
+    # gatherv: survivors' rows, exactly, at the remapped root
+    plan = svc.plan("gatherv", ssizes, root=sroot)
+    np.testing.assert_array_equal(
+        _gather_oracle(plan, blocks, sroot, F), expect)
+    checked.append("gatherv")
+
+    # allgatherv: every survivor ends with all survivors' rows
+    plan = svc.plan("allgatherv", ssizes)
+    bufs = np.zeros((q, plan.buf_rows, F), np.int64)
+    for i, b in enumerate(blocks):
+        bufs[i, plan.in_starts[i]: plan.in_starts[i] + len(b)] = b
+    out = execute_steps_numpy(plan.steps, bufs)
+    for j in range(q):
+        np.testing.assert_array_equal(out[j, : plan.total], expect)
+    checked.append("allgatherv")
+
+    # alltoallv: the shrunk matrix drops the dead rank's row AND column
+    S = rng.integers(0, 20, (p, p))
+    Sq = shrink_matrix(S, survivors)
+    a2a = [[rng.integers(0, 1_000_000, (int(Sq[i][j]), F))
+            for j in range(q)] for i in range(q)]
+    plan = svc.plan("alltoallv", [list(map(int, r)) for r in Sq])
+    got = execute_alltoallv_plan_numpy(plan, a2a)
+    for j in range(q):
+        exp = np.concatenate([a2a[i][j] for i in range(q)], axis=0) \
+            if q else a2a[0][j]
+        np.testing.assert_array_equal(got[j], exp)
+    checked.append("alltoallv")
+
+    # reduce_scatterv / allreducev: EXACT sums over the survivors only
+    # (int64 contributions — associativity cannot blur the check)
+    total = sum(ssizes)
+    contribs = [rng.integers(-1000, 1000, (total, F)).astype(np.int64)
+                for _ in range(q)]
+    truth = np.sum(contribs, axis=0)
+    plan = svc.plan("reduce_scatterv", ssizes)
+    red = execute_reduce_scatterv_plan_numpy(plan, contribs)
+    off = 0
+    for j, s in enumerate(ssizes):
+        np.testing.assert_array_equal(red[j], truth[off: off + s])
+        off += s
+    checked.append("reduce_scatterv")
+
+    plan = svc.plan("allreducev", ssizes)
+    allred = execute_allreducev_plan_numpy(plan, contribs)
+    for j in range(q):
+        np.testing.assert_array_equal(allred[j], truth)
+    checked.append("allreducev")
+
+    rows = [(f"chaos/host_loss_p{p}_to_{q}", 0.0,
+             f"ops={len(checked)};survivors={q};exact=1")]
+    return rows, {"p": p, "lost": VICTIM, "loss_step": loss_step,
+                  "survivors": survivors, "root_remap": sroot,
+                  "ops_exact": checked}
+
+
+def timeout_retry_leg(quick: bool) -> tuple[list, dict]:
+    """Deadline/retry path: transient faults absorbed, persistent ones
+    escalate to CollectiveTimeout and climb the straggler ladder."""
+    schedule = FaultSchedule.scripted(
+        TimeoutFault(step=0, op="gatherv", attempts=1),   # transient
+        TimeoutFault(step=1, op="gatherv", attempts=9))   # persistent
+    policy = StragglerPolicy()
+    inj = ExecutionFaultInjector(schedule).install()
+    jc.configure_step_deadline(1.0, retries=2, backoff=2.0)
+    try:
+        out, _dt, attempts = jc.call_with_deadline("gatherv", lambda: 42)
+        assert out == 42 and attempts == 2, (out, attempts)
+        inj.advance(1)
+        escalated = False
+        try:
+            jc.call_with_deadline("gatherv", lambda: 42)
+        except jc.CollectiveTimeout:
+            escalated = True
+            action = policy.record_timeout(1)
+        assert escalated, "persistent fault failed to escalate"
+        assert action == "warn"
+    finally:
+        inj.uninstall()
+        jc.configure_step_deadline(None)
+    rows = [("chaos/timeout_retry", 0.0,
+             f"injected={inj.injected};escalated=1;action={action}")]
+    return rows, {"injected": inj.injected, "transient_attempts": 2,
+                  "escalated": escalated, "ladder_action": action}
+
+
+def run(quick: bool = False):
+    rows: list = []
+    payload: dict = {"version": SCHEMA_VERSION, "quick": bool(quick)}
+    r, payload["degraded_link"] = degraded_link_leg(quick)
+    rows += r
+    r, payload["host_loss"] = host_loss_leg(quick)
+    rows += r
+    r, payload["timeout_retry"] = timeout_retry_leg(quick)
+    rows += r
+    return rows, payload
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller problems (CI chaos lane)")
+    ap.add_argument("--out", default=os.path.join(RESULTS,
+                                                  "chaos_bench.json"))
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    rows, payload = run(quick=args.quick)
+    emit(rows)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {args.out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,3 +1,4 @@
 from .store import (  # noqa: F401
-    AsyncCheckpointer, latest_step, restore, save, plan_consolidation,
+    AsyncCheckpointer, latest_step, plan_consolidation, restore,
+    restore_latest, save, shrink_consolidation,
 )

@@ -100,6 +100,43 @@ def latest_step(directory: str) -> int | None:
     return best
 
 
+def restore_latest(template, directory: str, shardings=None):
+    """Elastic resume entry point: restore the newest COMPLETE step.
+
+    Returns ``(tree, manifest)`` or ``(template, None)`` when no complete
+    checkpoint exists.  The shrink path restores through this with the
+    SURVIVORS' shardings tree — the checkpoint layout is full-leaf
+    host arrays, so resharding onto a p-1 mesh is just a different
+    ``shardings`` argument, no rewrite of the checkpoint."""
+    step = latest_step(directory)
+    if step is None:
+        return template, None
+    return restore(template, step, directory, shardings=shardings)
+
+
+def shrink_consolidation(shard_bytes: list[int], lost_ranks,
+                         root: int = 0) -> dict:
+    """Re-plan checkpoint consolidation after an elastic shrink.
+
+    Drops the lost ranks' shard entries, remaps ``root`` onto the
+    survivor numbering (a dead coordinator falls back to survivor 0),
+    and returns :func:`plan_consolidation` of the surviving shards plus
+    the rank remap — the gather tree is rebuilt over p-1 ranks, not
+    patched, exactly like the collective plans after an evict."""
+    lost = {int(r) for r in (lost_ranks or ())}
+    survivors = [r for r in range(len(shard_bytes)) if r not in lost]
+    if not survivors:
+        raise ValueError("no surviving ranks")
+    if root in lost:
+        root = survivors[0]
+    plan = plan_consolidation([shard_bytes[r] for r in survivors],
+                              root=survivors.index(root))
+    plan["survivors"] = survivors
+    plan["rank_remap"] = {old: new for new, old in enumerate(survivors)}
+    plan["root"] = int(root)
+    return plan
+
+
 def restore(template, step: int, directory: str, shardings=None):
     """Restore into ``template``'s tree structure.  ``shardings`` (same
     tree of NamedSharding/None) reshards on load — elastic restore onto a

@@ -92,7 +92,8 @@ def linear_tree(m: list[int], root: int) -> GatherTree:
     return GatherTree(p, root, edges, [], contiguous=True, name="linear")
 
 
-def two_level_tree(m: list[int], root: int, node_size: int = 16) -> GatherTree:
+def two_level_tree(m: list[int], root: int, node_size: int = 16,
+                   health: dict | None = None) -> GatherTree:
     """Topology-derived two-level gather: TUW inside each host, TUW across.
 
     Hosts are the ``node_size``-rank consecutive groups of a
@@ -112,11 +113,21 @@ def two_level_tree(m: list[int], root: int, node_size: int = 16) -> GatherTree:
     and executes it like any other tree, and
     ``GatherTree.reversed_for_scatter()`` gives the two-level scatter /
     broadcast for free.
+
+    ``health`` (rank → link slowdown factor, or a
+    ``costmodel.LinkHealthMap``) makes both levels fault-aware: each
+    non-root host's free leader election avoids its degraded ranks, and
+    the leader tree treats every host as degraded as its sickest rank —
+    so a sick host's leader never receives other hosts' data and the
+    host hangs off the leader tree as a leaf.
     """
     p = len(m)
     if not 0 <= root < p:
         raise ValueError("root out of range")
     D = max(1, int(node_size))
+    if health is not None and hasattr(health, "degraded_ranks"):
+        health = health.degraded_ranks()
+    health = {r: f for r, f in (health or {}).items() if f != 1.0}
     edges: list[Edge] = []
     leaders: list[int] = []
     totals: list[int] = []
@@ -125,19 +136,28 @@ def two_level_tree(m: list[int], root: int, node_size: int = 16) -> GatherTree:
         hi = min(base + D, p)
         local = m[base:hi]
         lroot = root - base if base <= root < hi else None
-        t = build_gather_tree(local, root=lroot)
+        lhealth = {r - base: f for r, f in health.items()
+                   if base <= r < hi} or None
+        t = build_gather_tree(local, root=lroot, health=lhealth)
         leaders.append(base + t.root)
         totals.append(sum(local))
         intra_rounds = max(intra_rounds, t.rounds)
         edges += [Edge(base + e.child, base + e.parent, e.size, e.round,
                        base + e.lo, base + e.hi) for e in t.edges]
     # leaders gather to the root over a TUW tree on per-host totals; host
-    # index ranges map back to rank ranges because hosts are consecutive
-    lt = build_gather_tree(totals, root=root // D)
+    # index ranges map back to rank ranges because hosts are consecutive.
+    # A host is as degraded as its sickest rank: every inter-host edge it
+    # terminates crosses that rank's links in the worst case.
+    hhealth: dict[int, float] = {}
+    for r, f in health.items():
+        h = r // D
+        hhealth[h] = max(hhealth.get(h, 1.0), f)
+    lt = build_gather_tree(totals, root=root // D, health=hhealth or None)
     edges += [Edge(leaders[e.child], leaders[e.parent], e.size,
                    intra_rounds + e.round,
                    e.lo * D, min((e.hi + 1) * D, p) - 1) for e in lt.edges]
-    return GatherTree(p, root, edges, [], contiguous=True, name="two_level")
+    name = "two_level+health" if health else "two_level"
+    return GatherTree(p, root, edges, [], contiguous=True, name=name)
 
 
 def two_level_library_tree(m: list[int], root: int,

@@ -208,14 +208,214 @@ class HierarchicalCostParams:
             self.topology)
 
 
+@dataclass(frozen=True)
+class LinkHealthMap:
+    """Per-rank link degradation overlay: multiplicative (α, β) factors.
+
+    The fault-aware planner's view of a sick machine.  ``factors`` holds
+    ``(rank, beta_factor)`` pairs (sorted; only factors != 1 are kept) —
+    a factor of 16 means every link touching that rank moves bytes 16×
+    slower; ``alpha_factors`` does the same for startup latency (stalls,
+    flaky NICs).  An edge is as slow as its slowest endpoint:
+    ``edge_factor(src, dst) = max(factor[src], factor[dst])`` — a host
+    with a degraded NIC degrades every link it terminates.
+
+    Frozen and hashable so it can ride inside the (frozen) overlay
+    parameter types and contribute to plan-cache fingerprints.
+    """
+
+    factors: tuple = ()
+    alpha_factors: tuple = ()
+
+    def __post_init__(self) -> None:
+        for _, f in tuple(self.factors) + tuple(self.alpha_factors):
+            if not (math.isfinite(f) and f > 0):
+                raise ValueError(f"invalid health factor: {f}")
+        object.__setattr__(self, "_bf", dict(self.factors))
+        object.__setattr__(self, "_af", dict(self.alpha_factors))
+
+    @staticmethod
+    def from_factors(beta_factors: dict | None = None,
+                     alpha_factors: dict | None = None) -> "LinkHealthMap":
+        """Build from rank-keyed factor dicts; factors of 1 are dropped."""
+        def norm(d):
+            return tuple(sorted((int(r), float(f))
+                                for r, f in (d or {}).items()
+                                if float(f) != 1.0))
+        return LinkHealthMap(norm(beta_factors), norm(alpha_factors))
+
+    @staticmethod
+    def from_hosts(host_factors: dict, topology: "HostTopology | None",
+                   alpha_factors: dict | None = None) -> "LinkHealthMap":
+        """Expand host-keyed factors to every rank of each host.
+
+        ``topology=None`` means one rank per host (flat mesh): host ids
+        ARE rank ids.
+        """
+        def expand(d):
+            if not d:
+                return {}
+            if topology is None:
+                return {int(h): float(f) for h, f in d.items()}
+            out = {}
+            for h, f in d.items():
+                lo, hi = topology.host_slice(int(h))
+                for r in range(lo, hi):
+                    out[r] = float(f)
+            return out
+        return LinkHealthMap.from_factors(expand(host_factors),
+                                          expand(alpha_factors))
+
+    def is_trivial(self) -> bool:
+        return not self.factors and not self.alpha_factors
+
+    def rank_factor(self, rank: int) -> float:
+        """β slowdown of links touching ``rank`` (1.0 = healthy)."""
+        return self._bf.get(rank, 1.0)
+
+    def edge_factor(self, src: int, dst: int) -> tuple:
+        """(α factor, β factor) of the link (src, dst)."""
+        fa = max(self._af.get(src, 1.0), self._af.get(dst, 1.0))
+        fb = max(self._bf.get(src, 1.0), self._bf.get(dst, 1.0))
+        return fa, fb
+
+    def degraded_ranks(self) -> dict:
+        """rank → β factor for every rank slower than healthy (> 1)."""
+        return {r: f for r, f in self.factors if f > 1.0}
+
+    def worst_alpha_factor(self) -> float:
+        return max((f for _, f in self.alpha_factors), default=1.0)
+
+    def merged(self, beta_factors: dict | None = None,
+               alpha_factors: dict | None = None) -> "LinkHealthMap":
+        """New map with per-rank updates applied (factor 1 clears)."""
+        bf = dict(self.factors)
+        bf.update({int(r): float(f) for r, f in (beta_factors or {}).items()})
+        af = dict(self.alpha_factors)
+        af.update({int(r): float(f)
+                   for r, f in (alpha_factors or {}).items()})
+        return LinkHealthMap.from_factors(bf, af)
+
+    def fingerprint(self) -> str:
+        """Compact stable identity ("" when trivial) for plan-cache keys."""
+        if self.is_trivial():
+            return ""
+        parts = [f"{r}x{f:g}" for r, f in self.factors]
+        parts += [f"a{r}x{f:g}" for r, f in self.alpha_factors]
+        return "health[" + ",".join(parts) + "]"
+
+
+@dataclass(frozen=True)
+class DegradedCostParams:
+    """Base machine parameters overlaid with a :class:`LinkHealthMap`.
+
+    Wraps a flat :class:`CostParams` or :class:`HierarchicalCostParams`
+    and multiplies each edge's (α, β) by the health map's per-edge
+    factors — the cost-model truth of a degraded machine.  Every
+    simulator and data-plane cost view dispatches through
+    :func:`edge_params_fn`, so the overlay changes *predicted times and
+    therefore tree shapes* without any simulator knowing it exists.
+    """
+
+    base: object
+    health: LinkHealthMap
+
+    @property
+    def time_unit(self) -> str:
+        return self.base.time_unit
+
+    @property
+    def data_unit(self) -> str:
+        return self.base.data_unit
+
+    @property
+    def topology(self):
+        return getattr(self.base, "topology", None)
+
+    @property
+    def alpha(self) -> float:
+        """Flat-base α (the CLEAN value — per-edge factors apply via
+        :func:`edge_params_fn`); raises for a hierarchical base like
+        ``HierarchicalCostParams`` itself would."""
+        return self.base.alpha
+
+    @property
+    def beta(self) -> float:
+        return self.base.beta
+
+    def validate(self) -> None:
+        self.base.validate()  # health factors validated at construction
+
+    def require_compatible(self, other) -> None:
+        if (self.time_unit, self.data_unit) != (other.time_unit,
+                                                other.data_unit):
+            raise ValueError(
+                f"unit mismatch: ({self.time_unit}, {self.data_unit}) vs "
+                f"({other.time_unit}, {other.data_unit})")
+
+    def edge(self, src: int, dst: int) -> CostParams:
+        """Link-class parameters of one transfer, health applied."""
+        inner = (self.base.edge(src, dst)
+                 if isinstance(self.base, HierarchicalCostParams)
+                 else self.base)
+        fa, fb = self.health.edge_factor(src, dst)
+        if (fa, fb) == (1.0, 1.0):
+            return inner
+        return CostParams(inner.alpha * fa, inner.beta * fb,
+                          inner.time_unit, inner.data_unit)
+
+    def is_flat(self) -> bool:
+        base_flat = (not isinstance(self.base, HierarchicalCostParams)
+                     or self.base.is_flat())
+        return base_flat and self.health.is_trivial()
+
+    def scale_data(self, factor: float,
+                   data_unit: str = "row") -> "DegradedCostParams":
+        """β scaled by ``factor`` (row-width → bytes); health unchanged."""
+        if isinstance(self.base, HierarchicalCostParams):
+            scaled = self.base.scale_data(factor, data_unit)
+        else:
+            scaled = CostParams(self.base.alpha, self.base.beta * factor,
+                                self.base.time_unit, data_unit)
+        return DegradedCostParams(scaled, self.health)
+
+
+def worst_alpha(params) -> float:
+    """Largest startup latency any edge can pay under ``params``.
+
+    Used to charge the constant-size tree-construction exchanges, whose
+    top rounds cross the slowest links.
+    """
+    if isinstance(params, DegradedCostParams):
+        return worst_alpha(params.base) * params.health.worst_alpha_factor()
+    if isinstance(params, HierarchicalCostParams):
+        return max(params.ici.alpha, params.dcn.alpha)
+    return params.alpha
+
+
 def edge_params_fn(params):
     """(src, dst) → (α, β) lookup for flat OR hierarchical parameters.
 
     The single dispatch point all simulators (and the tuner's data-plane
     cost views) share: a flat :class:`CostParams` yields the same pair for
     every edge, so the hierarchical and flat paths run identical
-    arithmetic — the exact-reduction property tests rely on that.
+    arithmetic — the exact-reduction property tests rely on that.  A
+    :class:`DegradedCostParams` composes its base lookup with the health
+    map's per-edge factors, so every downstream consumer prices the
+    degraded machine automatically.
     """
+    if isinstance(params, DegradedCostParams):
+        inner = edge_params_fn(params.base)
+        h = params.health
+        if h.is_trivial():
+            return inner
+
+        def degraded(src, dst, _inner=inner, _h=h):
+            a, b = _inner(src, dst)
+            fa, fb = _h.edge_factor(src, dst)
+            return a * fa, b * fb
+
+        return degraded
     if isinstance(params, HierarchicalCostParams):
         ici = (params.ici.alpha, params.ici.beta)
         dcn = (params.dcn.alpha, params.dcn.beta)
@@ -254,8 +454,7 @@ def simulate_gather(tree: GatherTree, params, skip_empty: bool = True,
     ab = edge_params_fn(params)
     # construction messages are constant-size cube exchanges; the top
     # rounds cross hosts, so charge their startups at the slowest link
-    a = (max(params.ici.alpha, params.dcn.alpha)
-         if isinstance(params, HierarchicalCostParams) else params.alpha)
+    a = worst_alpha(params)
     # topological processing: a node's ready time needs all children's ready
     # times.  Children rounds < node's send round, so process edges grouped
     # by round; compute ready[] lazily by recursion instead (iterative DFS).
@@ -297,8 +496,7 @@ def simulate_scatter(tree: GatherTree, params, skip_empty: bool = True,
     """
     params.validate()
     ab = edge_params_fn(params)
-    a = (max(params.ici.alpha, params.dcn.alpha)
-         if isinstance(params, HierarchicalCostParams) else params.alpha)
+    a = worst_alpha(params)
     st = tree.reversed_for_scatter()
     # recv_done[x]: time x has received its subtree data from its parent.
     recv_done: dict[int, float] = {st.root: 0.0}

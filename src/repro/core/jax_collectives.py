@@ -475,17 +475,111 @@ def scatterv_shard(buf_root: jax.Array, plan: GathervPlan, axis_name: str) -> ja
 # convenience drivers
 # --------------------------------------------------------------------------
 
+class InjectedFault(RuntimeError):
+    """A chaos-injected delivery failure (one attempt); retried like a
+    real transient fault."""
+
+
+class CollectiveTimeout(RuntimeError):
+    """A collective missed its per-step deadline after bounded retry.
+
+    Raised instead of hanging so the caller (``runtime.restart.TrainLoop``)
+    can escalate to the straggler policy — warn → backup → evict."""
+
+    def __init__(self, op: str, attempts: int, deadline_s: float,
+                 last_s: float):
+        super().__init__(
+            f"collective {op!r} missed its {deadline_s * 1e3:.1f} ms step "
+            f"deadline after {attempts} attempt(s) "
+            f"(last took {last_s * 1e3:.1f} ms)")
+        self.op = op
+        self.attempts = attempts
+        self.deadline_s = deadline_s
+        self.last_s = last_s
+
+
+# step-deadline config for every host driver; None disables the check.
+_STEP_DEADLINE = {"deadline_s": None, "retries": 2, "backoff": 2.0,
+                  "sleep_s": 0.0}
+_FAULT_HOOK = None  # callable(op, attempt) raising InjectedFault, or None
+
+
+def configure_step_deadline(deadline_s: float | None, retries: int = 2,
+                            backoff: float = 2.0,
+                            sleep_s: float = 0.0) -> None:
+    """Arm (or disarm, ``deadline_s=None``) the per-step deadline.
+
+    Every host driver's execution gets ``retries`` retries; attempt ``k``
+    is allowed ``deadline_s * backoff**k`` (bounded exponential backoff —
+    transient congestion gets more slack each try), with an optional
+    ``sleep_s``-seeded backoff sleep between attempts.  The final miss
+    raises :class:`CollectiveTimeout`.
+    """
+    _STEP_DEADLINE.update(deadline_s=(None if deadline_s is None
+                                      else float(deadline_s)),
+                          retries=int(retries), backoff=float(backoff),
+                          sleep_s=float(sleep_s))
+
+
+def set_fault_hook(hook) -> None:
+    """Install a chaos hook called as ``hook(op, attempt)`` before every
+    host-driver execution attempt; raising :class:`InjectedFault` fails
+    that attempt into the retry path.  ``None`` uninstalls."""
+    global _FAULT_HOOK
+    _FAULT_HOOK = hook
+
+
+_MISSED = object()
+
+
+def call_with_deadline(op: str, thunk):
+    """Run ``thunk`` under the step deadline + bounded retry.
+
+    Returns ``(result, seconds, attempts)``.  An attempt fails if the
+    fault hook injects a fault or the wall time exceeds this attempt's
+    allowance; after ``retries`` failed retries, raises
+    :class:`CollectiveTimeout` instead of hanging the step.
+    """
+    deadline = _STEP_DEADLINE["deadline_s"]
+    retries = int(_STEP_DEADLINE["retries"])
+    backoff = float(_STEP_DEADLINE["backoff"])
+    sleep_s = float(_STEP_DEADLINE["sleep_s"])
+    attempt = 0
+    while True:
+        t0 = time.perf_counter()
+        try:
+            if _FAULT_HOOK is not None:
+                _FAULT_HOOK(op, attempt)
+            out = thunk()
+        except InjectedFault:
+            out = _MISSED
+        dt = time.perf_counter() - t0
+        allowance = (None if deadline is None
+                     else deadline * backoff ** attempt)
+        if out is not _MISSED and (allowance is None or dt <= allowance):
+            return out, dt, attempt + 1
+        attempt += 1
+        if attempt > retries:
+            raise CollectiveTimeout(op, attempt, deadline or 0.0, dt)
+        _OBS_REGISTRY.counter("run_retries").inc()
+        if sleep_s:
+            time.sleep(min(sleep_s * backoff ** (attempt - 1), 1.0))
+
+
 def _run_traced(op: str, plan, row_bytes: int, fn, xg) -> np.ndarray:
     """Execute a jitted driver with the telemetry plane around it.
 
     Wall-clock timing + default-registry counters always (single dict
     update, cheap enough to leave on); a trace span with the plan shape
     and bytes moved only when ``repro.obs.trace`` is enabled — the off
-    path is one ``None`` check.
+    path is one ``None`` check.  Execution goes through
+    :func:`call_with_deadline`, so an armed step deadline (or an
+    installed chaos fault hook) gets bounded retry and escalates as
+    :class:`CollectiveTimeout` instead of hanging.
     """
     tr = obs_trace.current()
     t0 = time.perf_counter()
-    out = np.asarray(fn(xg))
+    out, _, attempts = call_with_deadline(op, lambda: np.asarray(fn(xg)))
     dt = time.perf_counter() - t0
     _OBS_REGISTRY.counter("run_" + op).inc()
     _OBS_REGISTRY.histogram("run_seconds").observe(dt)
@@ -493,7 +587,8 @@ def _run_traced(op: str, plan, row_bytes: int, fn, xg) -> np.ndarray:
         args = {"op": op, "p": plan.p,
                 "segments": getattr(plan, "segments", 1),
                 "num_stages": getattr(plan, "num_stages", 0),
-                "measured_s": dt, "row_bytes": int(row_bytes)}
+                "measured_s": dt, "row_bytes": int(row_bytes),
+                "attempts": attempts}
         for cls, nb in obs_trace.plan_link_bytes(
                 plan.steps, row_bytes=int(row_bytes)).items():
             args[f"bytes_{cls}"] = nb

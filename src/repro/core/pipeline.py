@@ -286,6 +286,42 @@ def execute_allreducev_plan_numpy(plan, contribs) -> list[np.ndarray]:
     return [fin[j, : plan.total] for j in range(p)]
 
 
+def plan_host_times(steps, p: int, params, row_bytes: int = 1,
+                    topology=None) -> dict:
+    """Per-rank (or per-host) port-occupancy seconds of a lowered plan.
+
+    The span accounting of the NumPy/step-oracle dataplane: each step
+    charges both endpoints of every ``(src, dst)`` pair one startup plus
+    the bandwidth of the rows actually received (``recv_valid[dst]``
+    rows × ``row_bytes``) on their send/recv port, priced through
+    :func:`repro.core.costmodel.edge_params_fn` — so a
+    ``DegradedCostParams`` overlay (chaos injection, health map) shows
+    up in exactly the per-host span times ``StragglerPolicy
+    .observe_hosts`` consumes.  Returns ``{rank: seconds}``, or
+    ``{host: seconds}`` (max over the host's ranks — its slowest port)
+    when a ``HostTopology`` is given.
+    """
+    from .costmodel import edge_params_fn
+
+    params.validate()
+    ab = edge_params_fn(params)
+    rb = float(row_bytes)
+    t = [0.0] * int(p)
+    for perm, payload, send_start, recv_start, recv_valid in steps:
+        for s, d in perm:
+            a, b = ab(s, d)
+            c = a + b * float(recv_valid[d]) * rb
+            t[s] += c
+            t[d] += c
+    if topology is None:
+        return {r: t[r] for r in range(int(p))}
+    out: dict = {}
+    for r in range(int(p)):
+        h = topology.host_of(r)
+        out[h] = max(out.get(h, 0.0), t[r])
+    return out
+
+
 def execute_scatter_steps_numpy(plan, bufs: np.ndarray) -> np.ndarray:
     """NumPy mirror of ``jax_collectives.scatterv_shard``'s reverse walk:
     the gather plan's steps run backwards with transposed tables (parent

@@ -163,18 +163,31 @@ class _Cube:
         return self.total - m[self.root]
 
 
-def _pick_sender(a: _Cube, b: _Cube, m: list[int], root: int | None) -> tuple[_Cube, _Cube]:
+def _pick_sender(a: _Cube, b: _Cube, m: list[int], root: int | None,
+                 health: dict | None = None) -> tuple[_Cube, _Cube]:
     """Return (sender, receiver) for merging adjacent cubes a (lower), b.
 
     Fixed external root (Lemma 2): data always flows toward the cube holding
     it.  Otherwise (Lemma 1): the smaller gather-time estimate sends; ties
     broken in favor of the cube with less total data, then the lower cube.
+
+    ``health`` (rank → link slowdown factor, 1.0 = healthy) biases the
+    free choices: when the two cube roots are unequally degraded, the
+    *more* degraded root sends — receiving the other cube's data over its
+    slow link costs ``factor×`` more than shipping its own subtree once,
+    so a degraded rank is demoted toward the leaves (Lemma-1 freedom:
+    any root choice is admissible, so this costs no extra bytes).
     """
     if root is not None:
         if a.lo <= root <= a.hi:
             return b, a
         if b.lo <= root <= b.hi:
             return a, b
+    if health:
+        fa = health.get(a.root, 1.0)
+        fb = health.get(b.root, 1.0)
+        if fa != fb:
+            return (a, b) if fa > fb else (b, a)
     ea, eb = a.est(m), b.est(m)
     if ea != eb:
         return (a, b) if ea < eb else (b, a)
@@ -184,7 +197,8 @@ def _pick_sender(a: _Cube, b: _Cube, m: list[int], root: int | None) -> tuple[_C
 
 
 def build_gather_tree(m: list[int], root: int | None = None,
-                      degrade_threshold: int | None = None) -> GatherTree:
+                      degrade_threshold: int | None = None,
+                      health: dict | None = None) -> GatherTree:
     """Centralized reference construction (Lemmas 1-2).
 
     ``root=None``: the algorithm chooses the root (Lemma 1, no penalty).
@@ -193,6 +207,11 @@ def build_gather_tree(m: list[int], root: int | None = None,
     extensions.py): a merging cube whose live data exceeds the threshold is
     sealed — its root sends directly to the fixed root instead of through
     the tree; ancestors continue without that data.  Requires a fixed root.
+    ``health``: rank → link slowdown factor (or a
+    ``costmodel.LinkHealthMap``); unequally degraded cube roots make the
+    sicker one send, so degraded ranks end up as leaves (or, fixed root,
+    as deep as the Lemma-2 flow allows) and never forward foreign data
+    over their slow links.
     """
     p = len(m)
     if p == 0:
@@ -201,6 +220,9 @@ def build_gather_tree(m: list[int], root: int | None = None,
         raise ValueError("root out of range")
     if degrade_threshold is not None and root is None:
         raise ValueError("graceful degradation needs a fixed root")
+    if health is not None and hasattr(health, "degraded_ranks"):
+        health = health.degraded_ranks()
+    health = {r: f for r, f in (health or {}).items() if f != 1.0} or None
     cubes = [_Cube(i, i, i, m[i]) for i in range(p)]
     edges: list[Edge] = []
     trace: list[Merge] = []
@@ -213,7 +235,7 @@ def build_gather_tree(m: list[int], root: int | None = None,
                 nxt.append(cubes[a])  # lone incomplete cube passes through
                 continue
             A, B = cubes[a], cubes[a + 1]
-            snd, rcv = _pick_sender(A, B, m, root)
+            snd, rcv = _pick_sender(A, B, m, root, health)
             slo, shi = (snd.lo, snd.hi) if not snd.holes else (-1, -1)
             if (degrade_threshold is not None and snd.total > degrade_threshold
                     and rcv.root != root):
@@ -231,6 +253,8 @@ def build_gather_tree(m: list[int], root: int | None = None,
         cubes = nxt
         d += 1
     name = "tuw" if degrade_threshold is None else f"tuw+degrade({degrade_threshold})"
+    if health:
+        name += "+health"
     t = GatherTree(p, cubes[0].root, edges, trace,
                    contiguous=not any_holes, name=name)
     if root is not None:

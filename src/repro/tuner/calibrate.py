@@ -146,25 +146,39 @@ class SyntheticTimingBackend:
 
     def __init__(self, alpha_s: float = 1e-6,
                  beta_s_per_byte: float = 2e-11,
-                 noise: float = 0.0, seed: int = 0):
+                 noise: float = 0.0, seed: int = 0, chaos=None):
         if not (0.0 <= noise < 1.0):
             raise ValueError("noise in [0, 1)")
         self.alpha_s = float(alpha_s)
         self.beta_s_per_byte = float(beta_s_per_byte)
         self.noise = float(noise)
         self._rng = np.random.default_rng(seed)
+        # chaos: a runtime.chaos.FaultClock — every raw measurement is
+        # perturbed by the active fault schedule, so calibrating against
+        # a degraded machine and executing on it see the SAME machine
+        self.chaos = chaos
 
     def _jitter(self) -> float:
         if self.noise == 0.0:
             return 1.0
         return 1.0 + self.noise * float(self._rng.uniform(-1.0, 1.0))
 
+    def _fault(self, seconds: float, nbytes: float = 0,
+               kind: str = "measure") -> float:
+        if self.chaos is None:
+            return seconds
+        return self.chaos.apply(seconds, nbytes, kind=kind)
+
     def ping_pong(self, nbytes: int) -> float:
-        return (self.alpha_s + self.beta_s_per_byte * nbytes) * self._jitter()
+        return self._fault(
+            (self.alpha_s + self.beta_s_per_byte * nbytes) * self._jitter(),
+            nbytes, kind="ping_pong")
 
     def bisection(self, nbytes: int) -> float:
         # large single message: startup is amortized away by construction
-        return self.beta_s_per_byte * nbytes * self._jitter()
+        return self._fault(
+            self.beta_s_per_byte * nbytes * self._jitter(),
+            nbytes, kind="bisection")
 
     def true_params(self) -> CostParams:
         return CostParams(self.alpha_s, self.beta_s_per_byte,
@@ -179,12 +193,16 @@ class SyntheticTimingBackend:
         executor would ignore it — wall time needs no unit help.
         """
         na, nb = candidate.alpha_beta_weights()
-        return (na * self.alpha_s
-                + nb * row_bytes * self.beta_s_per_byte) * self._jitter()
+        return self._fault(
+            (na * self.alpha_s
+             + nb * row_bytes * self.beta_s_per_byte) * self._jitter(),
+            nb * row_bytes)
 
     def fingerprint(self) -> str:
+        tag = ("," + self.chaos.fingerprint()) if self.chaos is not None \
+            else ""
         return (f"synthetic(alpha={self.alpha_s:.3e},"
-                f"beta={self.beta_s_per_byte:.3e},noise={self.noise})")
+                f"beta={self.beta_s_per_byte:.3e},noise={self.noise}{tag})")
 
 
 class SyntheticHierarchicalBackend:
@@ -203,13 +221,17 @@ class SyntheticHierarchicalBackend:
                  alpha_ici_s: float = 1e-6, beta_ici_s_per_byte: float = 2e-11,
                  alpha_dcn_s: float = 50e-6,
                  beta_dcn_s_per_byte: float = 16e-11,
-                 noise: float = 0.0, seed: int = 0):
+                 noise: float = 0.0, seed: int = 0, chaos=None):
         self.topology = topology
+        # the DCN micro-benchmark crosses host links (chaos applies); the
+        # ICI one stays inside a host — per-host degrade events model the
+        # host's NETWORK links, not its intra-host fabric
         self.ici = SyntheticTimingBackend(alpha_ici_s, beta_ici_s_per_byte,
                                           noise, seed)
         self.dcn = SyntheticTimingBackend(alpha_dcn_s, beta_dcn_s_per_byte,
-                                          noise, seed + 1)
+                                          noise, seed + 1, chaos=chaos)
         self.noise = float(noise)
+        self.chaos = chaos
         self._rng = np.random.default_rng(seed + 2)
 
     def axis(self, name: str) -> SyntheticTimingBackend:
@@ -232,7 +254,10 @@ class SyntheticHierarchicalBackend:
         jitter = 1.0
         if self.noise:
             jitter = 1.0 + self.noise * float(self._rng.uniform(-1.0, 1.0))
-        return float(t) * jitter
+        t = float(t) * jitter
+        if self.chaos is not None:
+            t = self.chaos.apply(t)
+        return t
 
     def fingerprint(self) -> str:
         return (f"synthetic_hier({self.topology.hosts}x"

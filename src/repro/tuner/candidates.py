@@ -254,11 +254,20 @@ def rooted_model_candidates(op: str, m, root: int, params: CostParams,
     return out
 
 
+def _norm_health(health) -> dict:
+    """Rank → factor dict of the genuinely degraded ranks ({} if none)."""
+    if health is None:
+        return {}
+    if hasattr(health, "degraded_ranks"):
+        return health.degraded_ranks()
+    return {r: f for r, f in dict(health).items() if f != 1.0}
+
+
 def rooted_dataplane_candidates(op: str, m, root: int,
                                 buckets=(1, 2, 4),
                                 segments=(1,),
-                                topology: HostTopology | None = None
-                                ) -> list[Candidate]:
+                                topology: HostTopology | None = None,
+                                health=None) -> list[Candidate]:
     """Lowered-plan view: only executable schedules, costed by their padded
     ppermute steps.  The linear tree legalizes into serialized waves, so
     its step count (p-1 startups) is faithfully represented.
@@ -277,37 +286,60 @@ def rooted_dataplane_candidates(op: str, m, root: int,
     executable wherever the flat trees are; under flat parameters it
     costs about the same as ``tuw``, under hierarchical parameters the
     per-link charging decides the race.
+
+    ``health`` (rank → link slowdown factors, or a ``LinkHealthMap``)
+    adds fault-routed variants (``tuw_health`` / ``two_level_health``):
+    the same constructions with degraded ranks demoted toward the leaves
+    (``build_gather_tree(..., health=...)``).  They race like everything
+    else — under healthy parameters they lose honestly, under a
+    ``DegradedCostParams`` overlay they win by routing around the sick
+    links.
     """
     from repro.core.jax_collectives import plan_gatherv
 
     if op not in ("gatherv", "scatterv"):
         raise ValueError(op)
     m = [int(x) for x in m]
+    health = _norm_health(health)
     tuw = build_gather_tree(m, root=root)
     lin = baselines.linear_tree(m, root)
     trees = [(tuw, "tuw"), (lin, "linear")]
     if topology is not None and topology.hosts > 1:
         trees.append((baselines.two_level_tree(
             m, root, topology.devices_per_host), "two_level"))
+    if health:
+        htuw = build_gather_tree(m, root=root, health=health)
+        if htuw.edges != tuw.edges:
+            trees.append((htuw, "tuw_health"))
+        if topology is not None and topology.hosts > 1:
+            htl = baselines.two_level_tree(
+                m, root, topology.devices_per_host, health=health)
+            trees.append((htl, "two_level_health"))
     out = []
     for tree, base in trees:
         for b in buckets if base == "tuw" else (1,):
             plan = plan_gatherv(m, root, tree=tree, bucket_rounds=b)
-            name = "two_level" if base == "two_level" else f"{base}(b={b})"
+            name = (base if base.startswith("two_level")
+                    else f"{base}(b={b})")
             out.append(Candidate(
                 name, op, True,
                 cost_fn=lambda P, pl=plan: plan_step_cost(pl, P),
                 builder=lambda pl=plan: pl,
                 bytes_exact=plan.tree_bytes_exact, bucket_rounds=b))
+    pipelined = [(tuw, "tuw")]
+    if health and any(base == "tuw_health" for _, base in trees):
+        pipelined.append((next(t for t, b in trees if b == "tuw_health"),
+                          "tuw_health"))
     for s in segments:
         if s <= 1:
             continue  # S=1 is exactly tuw(b=1) above
-        plan = plan_gatherv(m, root, tree=tuw, segments=s)
-        out.append(Candidate(
-            f"tuw(b=1,S={s})", op, True,
-            cost_fn=lambda P, pl=plan: plan_pipeline_cost(pl, P),
-            builder=lambda pl=plan: pl,
-            bytes_exact=plan.tree_bytes_exact, segments=s))
+        for tree, base in pipelined:
+            plan = plan_gatherv(m, root, tree=tree, segments=s)
+            out.append(Candidate(
+                f"{base}(b=1,S={s})", op, True,
+                cost_fn=lambda P, pl=plan: plan_pipeline_cost(pl, P),
+                builder=lambda pl=plan: pl,
+                bytes_exact=plan.tree_bytes_exact, segments=s))
     return out
 
 
@@ -319,8 +351,8 @@ def composed_dataplane_candidates(op: str, arg, root: int | None = None,
                                   buckets=(1, 2, 4),
                                   segments=(1,),
                                   wave_bins=(),
-                                  topology: HostTopology | None = None
-                                  ) -> list[Candidate]:
+                                  topology: HostTopology | None = None,
+                                  health=None) -> list[Candidate]:
     """``bucket_rounds`` variants of the composed TUW schedules, costed on
     their lowered plans.  Bucketing trades startups (more ppermutes) for
     padding (smaller payloads) — a pure α-β tradeoff the selector decides
@@ -441,6 +473,42 @@ def composed_dataplane_candidates(op: str, arg, root: int | None = None,
         for wb in wave_bins:
             add(out, f"two_level_composed({bin_tag(wb)})", hlower(wb),
                 wave_bin_ratio=wb)
+    health = _norm_health(health)
+    if health:
+        # fault-routed variants: the same compositions over health-aware
+        # trees (degraded ranks demoted to leaves / host leaders
+        # re-elected off them).  They race like everything else and only
+        # win when a DegradedCostParams overlay prices the sick links.
+        if op == "allgatherv":
+            m = [int(x) for x in arg]
+            ht = build_gather_tree(m, root=root, health=health)
+            hs = allgatherv_schedule(m, root=ht.root, tree=ht)
+            add(out, "tuw_composed_health", plan_allgatherv(
+                arg, root=root, validate=False, schedule=hs))
+        else:
+            hs = alltoallv_schedule(
+                np.asarray(arg, np.int64),
+                tree_builder=lambda row, r: build_gather_tree(
+                    row, root=r, health=health))
+            add(out, "tuw_composed_health", plan_alltoallv(
+                arg, validate=False, schedule=hs))
+        if topology is not None and topology.hosts > 1:
+            D = topology.devices_per_host
+            if op == "allgatherv":
+                m = [int(x) for x in arg]
+                r0 = int(np.argmax(m)) if root is None else root
+                htl = allgatherv_schedule(
+                    m, root=r0, tree=baselines.two_level_tree(
+                        m, r0, D, health=health))
+                add(out, "two_level_composed_health", plan_allgatherv(
+                    arg, root=root, validate=False, schedule=htl))
+            else:
+                htl = alltoallv_schedule(
+                    np.asarray(arg, np.int64),
+                    tree_builder=lambda row, r: baselines.two_level_tree(
+                        row, r, D, health=health))
+                add(out, "two_level_composed_health", plan_alltoallv(
+                    arg, validate=False, schedule=htl))
     return out
 
 
@@ -543,8 +611,8 @@ def enumerate_candidates(op: str, arg, root: int | None,
                          buckets=(1, 2, 4),
                          segments=(1,),
                          wave_bins=(),
-                         topology: HostTopology | None = None
-                         ) -> list[Candidate]:
+                         topology: HostTopology | None = None,
+                         health=None) -> list[Candidate]:
     """All candidates for one problem.  ``arg`` is the size vector (rooted
     and allgatherv ops) or the p x p size matrix (alltoallv); ``segments``
     adds pipelined data-plane variants (``S > 1`` entries only) and
@@ -552,6 +620,11 @@ def enumerate_candidates(op: str, arg, root: int | None,
     host) adds the hierarchical two-level schedules — candidate costs then
     accept :class:`~repro.core.costmodel.HierarchicalCostParams` in the
     dataplane view (the model view's extension simulators are flat-only).
+    ``health`` (rank → link slowdown factors or a ``LinkHealthMap``)
+    adds fault-routed ``*_health`` variants of the byte-moving dataplane
+    schedules; the reduction ops accept it for signature parity (their
+    existing candidates re-price under the overlay, but health-shaped
+    reduction trees are future work).
     """
     if op not in OPS:
         raise ValueError(f"unknown op {op!r}; expected one of {OPS}")
@@ -567,7 +640,7 @@ def enumerate_candidates(op: str, arg, root: int | None,
             return rooted_model_candidates(op, arg, root, params,
                                            include_extensions, topology)
         return rooted_dataplane_candidates(op, arg, root, buckets, segments,
-                                           topology)
+                                           topology, health=health)
     if op in ("reduce_scatterv", "allreducev"):
         # reduction ops likewise have only the data-plane view: the fused
         # -add executor IS the machine the schedules describe
@@ -580,4 +653,4 @@ def enumerate_candidates(op: str, arg, root: int | None,
     return composed_dataplane_candidates(op, arg, root=root, buckets=buckets,
                                          segments=segments,
                                          wave_bins=wave_bins,
-                                         topology=topology)
+                                         topology=topology, health=health)

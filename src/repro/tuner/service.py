@@ -61,8 +61,9 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.costmodel import (CostParams, HierarchicalCostParams,
-                                  HostTopology)
+from repro.core.costmodel import (CostParams, DegradedCostParams,
+                                  HierarchicalCostParams, HostTopology,
+                                  LinkHealthMap)
 from repro.obs import trace as obs_trace
 from repro.obs.guidelines_monitor import GuidelineMonitor
 from repro.obs.metrics import Registry
@@ -142,7 +143,8 @@ class PlannerService:
                  max_residuals: int = 512,
                  refit_window: int = 8,
                  refit_prior_weight: float = 4.0,
-                 auto_refit: bool = True):
+                 auto_refit: bool = True,
+                 health: LinkHealthMap | None = None):
         self.mesh = mesh
         self.axis = axis_name
         self.quantum = int(quantum)
@@ -227,6 +229,16 @@ class PlannerService:
         self.guidelines = GuidelineMonitor(slack=guideline_slack)
         self.params_epoch = 0
         self.drift_refits = 0
+        # ---------------------------------------------------- health plane
+        # per-rank link slowdown overlay: selection prices every candidate
+        # on the DEGRADED machine (DegradedCostParams), health-aware tree
+        # variants join the race, and the health fingerprint keys the plan
+        # cache so healthy-machine plans never serve a degraded one
+        self.health = health if health is not None else LinkHealthMap()
+        # last incident token that bumped the epoch: one fault incident may
+        # be reported by several detectors (per-link CUSUM + host ladder);
+        # it must invalidate the cache once, not once per detector
+        self._last_incident: object | None = None
         self.auto_refit = bool(auto_refit)
         self.refit_window = int(refit_window)
         self.refit_prior_weight = float(refit_prior_weight)
@@ -256,9 +268,15 @@ class PlannerService:
         else:
             sig = quantize_sizes(arg, self.quantum)
             p = len(sig)
+        mesh = mesh_fingerprint(self.mesh, self.topology)
+        hf = self.health.fingerprint()
+        if hf:
+            # health keys the cache directly (belt) in addition to the
+            # epoch bump on every health change (suspenders): a plan
+            # selected on a degraded machine never serves the healed one
+            mesh = f"{mesh}|{hf}"
         return PlanKey(op, p, sig, -1 if root is None else int(root),
-                       f"{dtype}r{int(row_bytes)}",
-                       mesh_fingerprint(self.mesh, self.topology),
+                       f"{dtype}r{int(row_bytes)}", mesh,
                        epoch=self.params_epoch)
 
     def _sel_params(self, row_bytes: int):
@@ -266,9 +284,16 @@ class PlannerService:
         row width (shared by planning, residual pricing, and tracing)."""
         rb = max(1, int(row_bytes))
         if isinstance(self.params, HierarchicalCostParams):
-            return self.params.scale_data(rb)
-        return CostParams(self.params.alpha, self.params.beta * rb,
-                          self.params.time_unit, "row")
+            base = self.params.scale_data(rb)
+        else:
+            base = CostParams(self.params.alpha, self.params.beta * rb,
+                              self.params.time_unit, "row")
+        if self.health.is_trivial():
+            return base
+        # price candidates on the machine we actually have: degraded
+        # links scale (α, β) per edge, so fault-aware shapes win the
+        # argmin exactly when they are faster on the degraded fabric
+        return DegradedCostParams(base, self.health)
 
     def plan_record(self, op: str, arg, root: int | None = None,
                     dtype: str = "float32", row_bytes: int = 1) -> PlanRecord:
@@ -292,7 +317,8 @@ class PlannerService:
                                      view="dataplane", buckets=self.buckets,
                                      segments=self.segments,
                                      wave_bins=self.wave_bins,
-                                     topology=self.topology)
+                                     topology=self.topology,
+                                     health=self.health)
         cal = self.calibrator
         if cal is not None:
             cal = _RowScaledCalibrator(cal, rb)
@@ -463,7 +489,8 @@ class PlannerService:
 
     def record_execution(self, op: str, rec: PlanRecord, measured_s: float,
                          row_bytes: int = 1, arg=None,
-                         root: int | None = None) -> bool:
+                         root: int | None = None,
+                         incident: object | None = None) -> bool:
         """Deposit one executed collective into the telemetry plane.
 
         Prices the plan under the CURRENT byte-scaled params, records
@@ -479,13 +506,23 @@ class PlannerService:
         rb = max(1, int(row_bytes))
         plan = rec.plan
         tu = self.params.time_unit
+        # snapshot the health overlay INTO the closure: a collective run
+        # on a degraded link is slow because the link is slow, not because
+        # the base (α, β) drifted — pricing it on the degraded machine
+        # keeps honest residuals near zero (no false CUSUM fire), and
+        # drift refits keep fitting the CLEAN base parameters
+        _h = self.health
+
+        def _overlay(P, __h=_h):
+            return P if __h.is_trivial() else DegradedCostParams(P, __h)
+
         if isinstance(self.params, HierarchicalCostParams):
             # byte-unit cost closure: maps BYTE-unit params to the
             # plan's predicted seconds (the row-width scaling lives
             # inside), so refit iterations can re-derive weights at any
             # candidate params without knowing the row width
-            def cost_fn(P, _plan=plan, _rb=rb):
-                return plan_pipeline_cost(_plan, P.scale_data(_rb))
+            def cost_fn(P, _plan=plan, _rb=rb, _ov=_overlay):
+                return plan_pipeline_cost(_plan, _ov(P.scale_data(_rb)))
 
             predicted = float(cost_fn(self.params))
             weights = hierarchical_weights(cost_fn, self.params)
@@ -495,9 +532,10 @@ class PlannerService:
                      + weights[3] * self.params.dcn.beta)
             cls = "dcn" if dcn_t >= ici_t else "ici"
         else:
-            def cost_fn(P, _plan=plan, _rb=rb, _tu=tu):
+            def cost_fn(P, _plan=plan, _rb=rb, _tu=tu, _ov=_overlay):
                 return plan_pipeline_cost(
-                    _plan, CostParams(P.alpha, P.beta * _rb, _tu, "row"))
+                    _plan,
+                    _ov(CostParams(P.alpha, P.beta * _rb, _tu, "row")))
 
             predicted = float(cost_fn(self.params))
             weights = flat_weights(cost_fn, self.params)
@@ -519,12 +557,73 @@ class PlannerService:
                            predicted_s=predicted,
                            measured_s=float(measured_s))
             if self.auto_refit:
-                self.refit_from_residuals()
+                self.refit_from_residuals(incident=incident)
         return fired
 
-    def refit_from_residuals(self) -> None:
+    # -------------------------------------------------------- health plane
+
+    def _bump_epoch(self, incident: object | None = None) -> bool:
+        """Invalidate every cached plan — at most once per incident.
+
+        One physical fault typically trips several detectors (the
+        per-link-class CUSUM and the straggler host ladder see the same
+        slow step); callers tag both reports with the same ``incident``
+        token and the cache flushes once.  ``incident=None`` always
+        bumps (the pre-fault drift path keeps its semantics)."""
+        if incident is not None and incident == self._last_incident:
+            return False
+        if incident is not None:
+            self._last_incident = incident
+        self.params_epoch += 1
+        self.metrics.gauge("params_epoch").set(self.params_epoch)
+        tr = obs_trace.current()
+        if tr is not None:
+            tr.instant("refit/epoch_bump", "drift",
+                       epoch=self.params_epoch,
+                       incident=repr(incident) if incident is not None
+                       else None)
+        return True
+
+    def update_link_health(self, factors: dict | None = None,
+                           hosts: dict | None = None,
+                           alpha_factors: dict | None = None,
+                           incident: object | None = None) -> bool:
+        """Overlay new link-health observations and replan if they changed.
+
+        ``factors`` maps RANK -> β slowdown factor (1.0 clears the rank);
+        ``hosts`` maps HOST -> factor and is expanded over the host's
+        ranks through the service topology.  A changed map bumps the
+        params epoch (guarded by ``incident``), so every stale plan dies
+        by key construction and the next request re-races the candidates
+        — now including the health-aware tree shapes — on the degraded
+        cost surface.  Returns True iff the map changed."""
+        new = self.health
+        if hosts:
+            hm = LinkHealthMap.from_hosts(hosts, self.topology)
+            new = new.merged(dict(hm.factors), dict(hm.alpha_factors))
+        if factors or alpha_factors:
+            new = new.merged(factors or {}, alpha_factors or {})
+        if new == self.health:
+            return False
+        self.health = new
+        self.metrics.counter("health_updates").inc()
+        self.metrics.gauge("degraded_ranks").set(
+            len(self.health.degraded_ranks()))
+        self._bump_epoch(incident)
+        return True
+
+    def clear_link_health(self, incident: object | None = None) -> bool:
+        """Drop the whole overlay (links healed / faults repaired)."""
+        if self.health.is_trivial():
+            return False
+        self.health = LinkHealthMap()
+        self.metrics.gauge("degraded_ranks").set(0)
+        self._bump_epoch(incident)
+        return True
+
+    def refit_from_residuals(self, incident: object | None = None) -> None:
         """Drift response: refit (α, β) from the post-shift residual rows
-        and bump ``params_epoch``.
+        and bump ``params_epoch`` (at most once per ``incident``).
 
         The epoch is part of every PlanKey, so the bump invalidates all
         cached plans priced under the stale model at once — the next
@@ -631,7 +730,7 @@ class PlannerService:
                                  cur.time_unit, cur.data_unit)]
         fits = [_fit_from(s) for s in starts]
         self.params = min(fits, key=_sse)
-        self.params_epoch += 1
+        self._bump_epoch(incident)
         self.drift_refits += 1
         if self.calibrator is not None:
             # rebase the race calibrator too: its old prior (and pre-drift
@@ -648,11 +747,6 @@ class PlannerService:
         for led in self.ledgers.values():
             led.reset_after_refit()
         self.metrics.counter("drift_refits").inc()
-        self.metrics.gauge("params_epoch").set(self.params_epoch)
-        tr = obs_trace.current()
-        if tr is not None:
-            tr.instant("refit/epoch_bump", "drift",
-                       epoch=self.params_epoch)
 
     def gatherv(self, blocks: list[np.ndarray], root: int):
         """Gather ragged blocks to ``root``; returns (result, plan) — the
@@ -835,6 +929,7 @@ class PlannerService:
                 "params": params,
                 "params_epoch": self.params_epoch,
                 "drift_refits": self.drift_refits,
+                "link_health": dict(self.health.factors),
                 "residuals": {cls: led.stats()
                               for cls, led in self.ledgers.items()},
                 "guidelines": self.guidelines.summary(),
