@@ -1,0 +1,215 @@
+"""Opttree bench: the optimal-tree schedule zoo against its oracles and
+its incumbents.
+
+Three legs, all deterministic (seeded signatures, synthetic machine — no
+devices needed):
+
+* **dp_exact** — the profile-frontier DP of ``repro.core.opttrees``
+  against the composition-exhaustive brute force on random uniform and
+  skewed signatures at p <= 10 (the provably exact zone).  HARD
+  assertion: every trial matches to 1e-9 relative.  Also reports solver
+  latency at p = 10 and p = OPT_P_MAX (the beam-capped heuristic zone).
+
+* **regimes** — the tuner's dataplane race in three regimes where a zoo
+  family must beat the incumbent tuw/chain candidates by >= 1.1x BOTH
+  predicted (cost under the selection params) and measured (the
+  ``SyntheticTimingBackend`` executing the candidate on the true
+  machine): a skewed-hot gatherv where the exact DP tree wins outright,
+  an α-dominated p=16 allgatherv where PAT's ``log2 p`` full-pairing
+  rounds win, and a β-dominated balanced p=12 allgatherv where the
+  van-de-Geijn ring's ``~β·M`` wins.  Each regime asserts the winner's
+  family AND the margin.
+
+* **memo** — warm replans hit the memoized construction: two
+  ``PlannerService`` instances (distinct PlanCaches) enumerate the same
+  quantized signature; the second enumeration must add ZERO solver
+  misses (counter asserted via ``opttrees.memo_stats()``).
+
+Writes ``results/opttree_bench.json`` (schema: EXPERIMENTS.md §Opttree
+bench):
+
+    PYTHONPATH=src python benchmarks/opttree_bench.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+if __package__ in (None, ""):  # direct-script execution
+    _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for _p in (_REPO, os.path.join(_REPO, "src")):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
+    from benchmarks.common import emit
+else:
+    from .common import emit
+
+from repro.core import opttrees
+from repro.core.costmodel import CostParams
+from repro.tuner import PlannerService, SyntheticTimingBackend
+from repro.tuner.candidates import enumerate_candidates
+
+RESULTS = os.path.join(os.environ.get("REPRO_RESULTS", os.getcwd()),
+                       "results")
+
+SCHEMA_VERSION = 1
+MIN_WIN = 1.1      # acceptance: predicted AND measured margin per regime
+
+# (name, op, sizes, root, alpha, beta, expected winner family, incumbents)
+REGIMES = (
+    # skewed two-hot far-root gatherv: the DP's per-child ERD ordering
+    # beats the oblivious TUW merge AND the linear baseline outright
+    ("opt_gatherv_skew", "gatherv",
+     [0, 1, 4, 1, 2, 3, 5, 1, 339], 8, 5.0, 1.0, "opt", ("tuw", "linear")),
+    # α-dominated small blocks at p=16: PAT's log2(p) full-pairing
+    # rounds halve the composed gather+broadcast's round count
+    ("pat_alpha_p16", "allgatherv",
+     [3] * 16, None, 100.0, 0.01, "pat", ("tuw_composed",)),
+    # β-dominated balanced blocks at p=12 (pat needs 2^K and drops out):
+    # the ring moves ~β·M vs the tree broadcast's repeated full buffers
+    ("vdg_beta_p12", "allgatherv",
+     [4096] * 12, None, 0.5, 1.0, "vdg_ring", ("tuw_composed",)),
+)
+
+
+def dp_exact_leg(quick: bool) -> tuple[list, dict]:
+    rng = np.random.default_rng(42)
+    trials = 12 if quick else 60
+    checked = 0
+    for t in range(trials):
+        p = int(rng.integers(2, 11))
+        if t % 2:
+            m = [int(x) for x in rng.integers(0, 40, p)]
+        else:
+            m = [int(x) for x in rng.integers(0, 4, p)]
+            m[int(rng.integers(0, p))] = int(rng.integers(100, 500))
+        root = int(rng.integers(0, p)) if t % 3 else None
+        alpha = float(rng.uniform(0.0, 20.0))
+        beta = float(rng.uniform(0.01, 2.0))
+        got = opttrees.optimal_tree_cost(m, root=root, alpha=alpha,
+                                         beta=beta)
+        brute = opttrees.brute_force_min_cost(m, root=root, alpha=alpha,
+                                              beta=beta)
+        assert abs(got - brute) <= 1e-9 * max(1.0, abs(brute)), (
+            f"DP {got} != brute {brute} on p={p} m={m} root={root}")
+        checked += 1
+
+    def solve_us(p: int, reps: int = 5) -> float:
+        ms = [int(x) for x in rng.integers(1, 50, p)]
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            opttrees._Solver(ms, 2.0, 1.0)   # unmemoized: raw DP latency
+        return (time.perf_counter() - t0) / reps * 1e6
+
+    us10 = solve_us(10)
+    us_max = solve_us(opttrees.OPT_P_MAX, reps=2)
+    rows = [
+        (f"opttree/dp_exact_p10", us10,
+         f"trials={checked};exact=1;max_p=10"),
+        (f"opttree/dp_beam_p{opttrees.OPT_P_MAX}", us_max,
+         f"beam={opttrees._BEAM_WIDTH};exact_zone<="
+         f"{opttrees.EXACT_FRONTIER_P}"),
+    ]
+    return rows, {"trials": checked, "max_p": 10, "all_exact": True,
+                  "solver_us_p10": us10,
+                  "solver_us_pmax": us_max,
+                  "opt_p_max": opttrees.OPT_P_MAX,
+                  "exact_frontier_p": opttrees.EXACT_FRONTIER_P}
+
+
+def regimes_leg(quick: bool) -> tuple[list, dict]:
+    rows, out = [], []
+    for name, op, m, root, alpha, beta, family, incumbents in REGIMES:
+        P = CostParams(alpha, beta)
+        cands = enumerate_candidates(op, m, root, P, view="dataplane",
+                                     segments=(1, 4))
+        predicted = {c.name: c.cost(P) for c in cands}
+        winner = min(predicted, key=predicted.get)
+        assert winner.split("(")[0] == family, (
+            f"{name}: expected a {family} win, tuner picked {winner} "
+            f"(costs {sorted((v, k) for k, v in predicted.items())[:4]})")
+        rival_pred = min(v for k, v in predicted.items()
+                         if any(k.startswith(i) for i in incumbents))
+        pred_ratio = rival_pred / predicted[winner]
+        # measured on the true machine: the synthetic backend executes
+        # each candidate's critical path under the SAME (alpha, beta)
+        machine = SyntheticTimingBackend(alpha_s=alpha,
+                                         beta_s_per_byte=beta, noise=0.0)
+        measured = {c.name: machine.measure(c) for c in cands}
+        rival_meas = min(v for k, v in measured.items()
+                         if any(k.startswith(i) for i in incumbents))
+        meas_ratio = rival_meas / measured[winner]
+        assert pred_ratio >= MIN_WIN and meas_ratio >= MIN_WIN, (
+            f"{name}: win {pred_ratio:.2f}x predicted / "
+            f"{meas_ratio:.2f}x measured (need >= {MIN_WIN})")
+        rows.append((f"opttree/{name}", predicted[winner],
+                     f"algo={winner};pred_win={pred_ratio:.2f};"
+                     f"meas_win={meas_ratio:.2f}"))
+        out.append({"regime": name, "op": op, "p": len(m), "root": root,
+                    "alpha": alpha, "beta": beta, "winner": winner,
+                    "family": family,
+                    "predicted_win": pred_ratio,
+                    "measured_win": meas_ratio})
+    return rows, {"min_win": MIN_WIN, "regimes": out}
+
+
+def memo_leg(quick: bool) -> tuple[list, dict]:
+    opttrees.clear_memo()
+    params = CostParams(1e-6, 2e-11, "s", "byte")
+    m = [4, 13, 2, 8, 1, 6, 9, 3]
+    svc1 = PlannerService(mesh=None, quantum=1, params=params)
+    t0 = time.perf_counter()
+    svc1.plan_record("allgatherv", m, row_bytes=64)
+    cold_us = (time.perf_counter() - t0) * 1e6
+    s1 = opttrees.memo_stats()
+    assert s1["opt_memo_misses"] >= 1, "enumeration never built an opt tree"
+    svc2 = PlannerService(mesh=None, quantum=1, params=params)
+    t0 = time.perf_counter()
+    svc2.plan_record("allgatherv", m, row_bytes=64)
+    warm_us = (time.perf_counter() - t0) * 1e6
+    s2 = opttrees.memo_stats()
+    assert s2["opt_memo_misses"] == s1["opt_memo_misses"], (
+        "warm replan re-solved the DP instead of hitting the memo")
+    assert s2["opt_memo_hits"] > s1["opt_memo_hits"]
+    rows = [("opttree/memo_cold", cold_us,
+             f"misses={s1['opt_memo_misses']}"),
+            ("opttree/memo_warm", warm_us,
+             f"hits={s2['opt_memo_hits']};misses={s2['opt_memo_misses']}")]
+    return rows, {"cold_us": cold_us, "warm_us": warm_us, **s2}
+
+
+def run(quick: bool = False):
+    rows: list = []
+    payload: dict = {"version": SCHEMA_VERSION, "quick": bool(quick)}
+    r, payload["dp_exact"] = dp_exact_leg(quick)
+    rows += r
+    r, payload["regimes"] = regimes_leg(quick)
+    rows += r
+    r, payload["memo"] = memo_leg(quick)
+    rows += r
+    return rows, payload
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer DP trials (CI opttree lane)")
+    ap.add_argument("--out", default=os.path.join(RESULTS,
+                                                  "opttree_bench.json"))
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    rows, payload = run(quick=args.quick)
+    emit(rows)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {args.out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

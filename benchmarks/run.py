@@ -62,8 +62,8 @@ def write_summary(benches: dict[str, tuple], total_s: float,
 
 def main() -> None:
     from . import chaos_bench, extensions_bench, guidelines_bench, \
-        jax_runtime, moe_dispatch, moe_e2e, paper_tables, pipeline_bench, \
-        roofline, serve_bench, tuner_bench, variants
+        jax_runtime, moe_dispatch, moe_e2e, opttree_bench, paper_tables, \
+        pipeline_bench, roofline, serve_bench, tuner_bench, variants
     t0 = time.time()
     print("name,us_per_call,derived")
     benches: dict[str, tuple] = {}
@@ -79,6 +79,7 @@ def main() -> None:
     benches["jax_runtime"] = jax_runtime.run()
     benches["roofline"] = roofline.run()
     benches["chaos"] = chaos_bench.run(quick=True)
+    benches["opttree"] = opttree_bench.run(quick=True)
     total = time.time() - t0
     out = write_summary(benches, total)
     print(f"# total {total:.1f}s", file=sys.stderr)

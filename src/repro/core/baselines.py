@@ -127,7 +127,9 @@ def two_level_tree(m: list[int], root: int, node_size: int = 16,
     D = max(1, int(node_size))
     if health is not None and hasattr(health, "degraded_ranks"):
         health = health.degraded_ranks()
-    health = {r: f for r, f in (health or {}).items() if f != 1.0}
+    # degradations are f > 1 only: a faster-than-baseline rank (f < 1)
+    # stays a first-class leader candidate
+    health = {r: f for r, f in (health or {}).items() if f > 1.0}
     edges: list[Edge] = []
     leaders: list[int] = []
     totals: list[int] = []

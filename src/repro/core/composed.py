@@ -197,9 +197,31 @@ def _tree_rounds(tree: GatherTree, skip_empty: bool = True):
     return [by[k] for k in sorted(by)]
 
 
+def _bcast_order(p: int, root: int, topology=None) -> list[int]:
+    """Rank order for sequential broadcast topologies (chain, binomial):
+    the root first, then the rest of the root's host in index order, then
+    the other hosts host-major.  On a two-level mesh a chain over this
+    order crosses the DCN exactly ``hosts - 1`` times (once per host
+    boundary) instead of up to once per RANK when hosts interleave along
+    the index order; flat meshes reduce to ``[root] + others``."""
+    if topology is None or getattr(topology, "hosts", 1) <= 1:
+        return [root] + [r for r in range(p) if r != root]
+    rh = topology.host_of(root)
+    order = [root]
+    lo, hi = topology.host_slice(rh, p)
+    order += [r for r in range(lo, hi) if r != root]
+    for h in range(topology.hosts):
+        if h == rh:
+            continue
+        lo, hi = topology.host_slice(h, p)
+        order += list(range(lo, hi))
+    return order
+
+
 def allgatherv_schedule(m, root: int | None = None,
                         broadcast: str = "tree",
-                        tree: GatherTree | None = None) -> ComposedSchedule:
+                        tree: GatherTree | None = None,
+                        topology=None) -> ComposedSchedule:
     """allgatherv = gatherv (free or fixed root) + broadcast of the packed
     buffer.  Every device ends with all blocks in rank order at their
     global offsets.
@@ -213,31 +235,64 @@ def allgatherv_schedule(m, root: int | None = None,
       NO chunking can collapse (the port is busy regardless of how the
       payload is sliced).  Right for monolithic execution.
     * ``"chain"`` — the classic pipelined broadcast: ranks form one chain
-      rooted at the gather root and every node forwards the buffer to its
+      rooted at the gather root (host-major under ``topology``, so each
+      DCN link is crossed once) and every node forwards the buffer to its
       successor.  ``p - 1`` rounds — hopeless monolithically — but every
       port sends the buffer ONCE, so under segmented execution stage
       ``t`` moves chunk ``t - k`` over edge ``k`` and the whole broadcast
       finishes in ``p - 2 + S`` stages of ``M/S``-sized port loads:
       ``β·M·(p - 2 + S)/S → β·M``, the true pipelined-broadcast collapse
       (cf. PAT's chain mode).  Right for ``segments > 1``.
+    * ``"binomial"`` — the log-time optimal broadcast (arXiv 2407.18004's
+      non-pipelined base case): ``ceil(log2 p)`` doubling rounds over the
+      same host-major order, every informed rank forwarding the full
+      buffer.  Fewest possible rounds for a broadcast; under segmented
+      execution the generic re-timing yields ``ceil(log2 p) + S - 1``
+      stages — the α-side of the optimal-broadcast tradeoff (the chain
+      holds the β side).
+    * ``"vdg"`` — van-de-Geijn allgatherv: the gather phase is elided
+      entirely (the input already IS the block-scattered buffer, so the
+      scatter half of scatter+ring-allgather is free) and ``p - 1`` ring
+      rounds follow, rank ``i`` forwarding block ``(i - k) mod p`` to
+      ``i + 1``.  Every round is a full cyclic permutation of single
+      blocks — no padding beyond ``max(m)``, total time
+      ``~(p-1)(α + β·max(m)) ≈ β·M`` on balanced sizes at ANY segment
+      count: the low-depth ``~2·β·M``-class bandwidth-optimal composition
+      without needing ``S ≫ 1``.
 
     ``tree`` overrides the gather tree (and, reversed, the ``"tree"``
     broadcast topology) — e.g. ``baselines.two_level_tree`` for a
     hierarchical mesh; it must be a contiguous tree over the same ``m``.
+    ``topology`` orders the chain/binomial phases host-major; it never
+    changes which bytes move, only which pairs carry them.
     """
     m = [int(x) for x in m]
     if any(x < 0 for x in m):
         raise ValueError("block sizes must be non-negative")
-    if broadcast not in ("tree", "chain"):
+    if broadcast not in ("tree", "chain", "binomial", "vdg"):
         raise ValueError(broadcast)
     p = len(m)
+    total = sum(m)
+    if broadcast == "vdg":
+        # ring-only: no gather phase, no tree; root is metadata
+        sched = ComposedSchedule("allgatherv", p,
+                                 0 if root is None else int(root),
+                                 np.asarray([m], np.int64),
+                                 np.zeros(1, np.int64))
+        offs = sched.offsets(0)
+        for k in range(p - 1):
+            rnd = [Transfer(i, (i + 1) % p, m[b], int(offs[b]), 0, b, b)
+                   for i in range(p)
+                   for b in ((i - k) % p,) if m[b] > 0]
+            if rnd:
+                sched.rounds.append(rnd)
+        return sched
     if tree is None:
         tree = build_gather_tree(m, root=root)
     elif tree.p != p or (root is not None and tree.root != root):
         raise ValueError("tree does not match this problem")
     else:
         _check_tree_fits(tree, m)
-    total = sum(m)
     sched = ComposedSchedule("allgatherv", p, tree.root,
                              np.asarray([m], np.int64),
                              np.zeros(1, np.int64))
@@ -258,12 +313,68 @@ def allgatherv_schedule(m, root: int | None = None,
                     Transfer(e.parent, e.child, total, 0, 0, 0, p - 1)
                     for e in edges
                 ])
+        elif broadcast == "binomial":
+            order = _bcast_order(p, tree.root, topology)
+            k = 1
+            while k < p:
+                sched.rounds.append([
+                    Transfer(order[j], order[j + k], total, 0, 0, 0, p - 1)
+                    for j in range(k) if j + k < p
+                ])
+                k <<= 1
         else:
-            chain = [tree.root] + [r for r in range(p) if r != tree.root]
+            chain = _bcast_order(p, tree.root, topology)
             for k in range(p - 1):
                 sched.rounds.append([
                     Transfer(chain[k], chain[k + 1], total, 0, 0, 0, p - 1)
                 ])
+    return sched
+
+
+def pat_allgatherv_schedule(m, root: int | None = None) -> ComposedSchedule:
+    """PAT-style parallel aggregated trees for allgatherv (arXiv
+    2506.20252), ``p = 2^K`` only.
+
+    Recursive doubling where every rank participates in every round:
+    round ``k`` pairs rank ``i`` with ``i XOR 2^k`` and each side sends
+    its whole currently-held block group — the ``2^k``-aligned
+    consecutive range ``[⌊i/2^k⌋·2^k, …+2^k-1]`` — so after ``log2 p``
+    rounds everyone holds everything.  Each round is a perfect pairing
+    permutation of contiguous ranges (ppermute-legal, zero transfers
+    skipped), every rank's ports are busy every round, and the total time
+    is ``log2(p)·α + β·Σ_k max-group(k)`` — the aggregated-tree
+    structure that wins the α-dominated large-p regime over both the
+    composed gather+broadcast (``~2·log2 p`` dependent rounds, root
+    ports serialized) and the chain.  ``root`` is metadata only (the
+    schedule is symmetric); general non-power-of-two p needs PAT's
+    two-phase fold, which is future work — the tuner simply doesn't
+    enumerate this candidate there.
+    """
+    m = [int(x) for x in m]
+    if any(x < 0 for x in m):
+        raise ValueError("block sizes must be non-negative")
+    p = len(m)
+    if p & (p - 1):
+        raise ValueError("pat_allgatherv_schedule needs p = 2^K")
+    sched = ComposedSchedule("allgatherv", p,
+                             0 if root is None else int(root),
+                             np.asarray([m], np.int64),
+                             np.zeros(1, np.int64))
+    offs = sched.offsets(0)
+    pref = np.concatenate([[0], np.cumsum(m)]).astype(np.int64)
+    k = 1
+    while k < p:
+        rnd = []
+        for i in range(p):
+            lo = (i // k) * k
+            hi = lo + k - 1
+            size = int(pref[hi + 1] - pref[lo])
+            if size > 0:
+                rnd.append(Transfer(i, i ^ k, size, int(offs[lo]),
+                                    0, lo, hi))
+        if rnd:
+            sched.rounds.append(rnd)
+        k <<= 1
     return sched
 
 
@@ -403,7 +514,7 @@ def _reduce_sched(m) -> tuple[ComposedSchedule, np.ndarray]:
     return sched, sched.offsets(0)
 
 
-def reduce_scatterv_schedule(m) -> ComposedSchedule:
+def reduce_scatterv_schedule(m, health=None) -> ComposedSchedule:
     """reduce_scatterv = one reduction tree per owned segment, packed.
 
     Segment ``j`` (``m[j]`` rows at its global offset, owned by rank
@@ -422,11 +533,20 @@ def reduce_scatterv_schedule(m) -> ComposedSchedule:
     :func:`alltoallv_schedule`, with send/receive roles reversed
     (reduction: the CHILD sends).
 
-    The schedule is a deterministic function of ``m`` alone, and every
-    accumulator folds its inputs in fixed (round-ordered) sequence —
-    results are bitwise reproducible run-to-run.  Zero-size segments need
-    no tree at all and ``p == 1`` needs no rounds (satellite-hardened
-    degenerate shapes).
+    ``health`` (rank → link slowdown factors, or a
+    ``costmodel.LinkHealthMap``) threads into each segment's tree build:
+    the Lemma-2 flow toward the fixed owner is untouched, but every free
+    merge demotes the more-degraded cube root toward the leaves — a
+    degraded rank then sends its own contribution once, early, and never
+    accumulates (receives) foreign partial sums over its slow link.
+
+    The schedule is a deterministic function of ``(m, health)`` alone,
+    and every accumulator folds its inputs in fixed (round-ordered)
+    sequence — results are bitwise reproducible run-to-run and
+    pipelined == monolithic stays bitwise under any health map (the
+    fold ORDER is the tree's round order either way).  Zero-size
+    segments need no tree at all and ``p == 1`` needs no rounds
+    (satellite-hardened degenerate shapes).
     """
     sched, offs = _reduce_sched(m)
     m = [int(x) for x in sched.sizes[0]]
@@ -435,9 +555,9 @@ def reduce_scatterv_schedule(m) -> ComposedSchedule:
     if p == 1 or not active:
         return sched
     # one topology for every segment modulo root: unit blocks make the
-    # tree a pure merge order, deterministic per (p, root)
+    # tree a pure merge order, deterministic per (p, root, health)
     tree_rounds = {
-        j: _tree_rounds(build_gather_tree([1] * p, root=j))
+        j: _tree_rounds(build_gather_tree([1] * p, root=j, health=health))
         for j in active
     }
     nxt = {j: 0 for j in active}

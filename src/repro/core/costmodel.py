@@ -425,6 +425,27 @@ def edge_params_fn(params):
     return lambda src, dst: ab
 
 
+def flat_alpha_beta(params) -> tuple[float, float]:
+    """Representative flat ``(α, β)`` of ANY parameter object.
+
+    Constructions that need a scalar startup/bandwidth RATIO — the
+    optimal-tree DP of ``repro.core.opttrees`` keys its memo on it —
+    call this instead of poking ``params.alpha`` (which raises on a
+    hierarchical base).  A :class:`DegradedCostParams` unwraps to its
+    clean base (the overlay is per-edge, not a global ratio shift);
+    hierarchical parameters report the per-axis worst case
+    ``(max α, max β)`` — conservative, and exact whenever the classes
+    agree.  NOT a pricing function: candidates built from this ratio
+    are always re-priced edge-by-edge via :func:`edge_params_fn`.
+    """
+    if isinstance(params, DegradedCostParams):
+        return flat_alpha_beta(params.base)
+    if isinstance(params, HierarchicalCostParams):
+        return (max(params.ici.alpha, params.dcn.alpha),
+                max(params.ici.beta, params.dcn.beta))
+    return float(params.alpha), float(params.beta)
+
+
 def collective_seconds(bytes_moved: float, link_bw: float = 50e9,
                        hops: int = 1, alpha_s: float = 1e-6) -> float:
     """Roofline collective term for bytes crossing one device's link.

@@ -222,7 +222,9 @@ def build_gather_tree(m: list[int], root: int | None = None,
         raise ValueError("graceful degradation needs a fixed root")
     if health is not None and hasattr(health, "degraded_ranks"):
         health = health.degraded_ranks()
-    health = {r: f for r, f in (health or {}).items() if f != 1.0} or None
+    # only factors > 1 are degradations; a rank FASTER than baseline
+    # (f < 1) must not be demoted to a leaf — that is the wrong direction
+    health = {r: f for r, f in (health or {}).items() if f > 1.0} or None
     cubes = [_Cube(i, i, i, m[i]) for i in range(p)]
     edges: list[Edge] = []
     trace: list[Merge] = []

@@ -28,11 +28,15 @@ import pickle
 from collections import OrderedDict
 from dataclasses import dataclass
 
-CACHE_VERSION = 6  # v6: telemetry plane — PlanKey grows a params-epoch
-                   # field (drift-triggered refits bump it, honestly
-                   # invalidating every plan priced under the stale
-                   # (α, β)); older stores carry epoch-less tokens and
-                   # are discarded wholesale
+CACHE_VERSION = 7  # v7: schedule zoo — the exact-DP opt trees, PAT,
+                   # van-de-Geijn ring and binomial-broadcast candidates
+                   # joined the enumeration (new candidate names, opt
+                   # construction memoized per quantized signature), and
+                   # reduction plans became health-shaped; older stores
+                   # predate those candidates and are discarded wholesale
+# v6: telemetry plane — PlanKey grows a params-epoch field
+# (drift-triggered refits bump it, honestly invalidating every plan
+# priced under the stale (α, β)); older stores carry epoch-less tokens
 # v5: reduction collectives — reduce_scatterv/allreducev joined the op
 # space with their own PlanKey op tags; dtype began discriminating
 # accumulation type

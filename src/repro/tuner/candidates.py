@@ -32,15 +32,18 @@ import numpy as np
 
 from repro.core import baselines
 from repro.core import extensions as ext
+from repro.core import opttrees
 from repro.core.composed import (allgatherv_schedule,
                                  alltoallv_direct_schedule,
                                  alltoallv_schedule,
+                                 pat_allgatherv_schedule,
                                  reduce_scatterv_direct_schedule,
                                  reduce_scatterv_halving_schedule,
                                  reduce_scatterv_schedule)
 from repro.core.costmodel import (CostParams, HierarchicalCostParams,
                                   HostTopology, edge_params_fn,
-                                  simulate_gather, simulate_scatter)
+                                  flat_alpha_beta, simulate_gather,
+                                  simulate_scatter)
 from repro.core.treegather import (GatherTree, build_gather_tree,
                                    construction_alpha_rounds)
 
@@ -232,6 +235,14 @@ def rooted_model_candidates(op: str, m, root: int, params: CostParams,
                            sim(two_level, constr2))]
     out += [_tree_candidate(name, op, tree, sim_plain(tree))
             for name, tree in zoo]
+    if 2 <= p <= opttrees.OPT_P_MAX:
+        # the exact DP tree (opttrees): construction is centralized and
+        # memoized planner-side, so like the oblivious baselines it
+        # carries no distributed-construction α rounds
+        opt = opttrees.optimal_gather_tree(m, root=root,
+                                           alpha=params.alpha,
+                                           beta=params.beta)
+        out.append(_tree_candidate("opt", op, opt, sim_plain(opt)))
     thr = ext.auto_threshold(m, params) if params.beta > 0 else None
     if thr is not None:
         deg = build_gather_tree(m, root=root, degrade_threshold=thr)
@@ -255,19 +266,25 @@ def rooted_model_candidates(op: str, m, root: int, params: CostParams,
 
 
 def _norm_health(health) -> dict:
-    """Rank → factor dict of the genuinely degraded ranks ({} if none)."""
+    """Rank → factor dict of the genuinely degraded ranks ({} if none).
+
+    Only factors > 1 count: a rank with f < 1 is FASTER than baseline
+    and must keep its interior (forwarding) role — treating it as
+    degraded would demote it to a structural leaf, the exact opposite
+    of what its fast links warrant."""
     if health is None:
         return {}
     if hasattr(health, "degraded_ranks"):
         return health.degraded_ranks()
-    return {r: f for r, f in dict(health).items() if f != 1.0}
+    return {r: f for r, f in dict(health).items() if f > 1.0}
 
 
 def rooted_dataplane_candidates(op: str, m, root: int,
                                 buckets=(1, 2, 4),
                                 segments=(1,),
                                 topology: HostTopology | None = None,
-                                health=None) -> list[Candidate]:
+                                health=None,
+                                params=None) -> list[Candidate]:
     """Lowered-plan view: only executable schedules, costed by their padded
     ppermute steps.  The linear tree legalizes into serialized waves, so
     its step count (p-1 startups) is faithfully represented.
@@ -294,6 +311,13 @@ def rooted_dataplane_candidates(op: str, m, root: int,
     else — under healthy parameters they lose honestly, under a
     ``DegradedCostParams`` overlay they win by routing around the sick
     links.
+
+    ``params`` (optional cost parameters) sets the α/β ratio the
+    exact-DP ``opt`` candidate is constructed for
+    (``opttrees.optimal_gather_tree``, ``p <= OPT_P_MAX`` only; the
+    construction is memoized module-wide, so warm replans reuse it).
+    The candidate is still PRICED like every other on its lowered plan,
+    so a stale ratio can only cost selection quality, never honesty.
     """
     from repro.core.jax_collectives import plan_gatherv
 
@@ -304,6 +328,10 @@ def rooted_dataplane_candidates(op: str, m, root: int,
     tuw = build_gather_tree(m, root=root)
     lin = baselines.linear_tree(m, root)
     trees = [(tuw, "tuw"), (lin, "linear")]
+    if 2 <= len(m) <= opttrees.OPT_P_MAX:
+        a0, b0 = flat_alpha_beta(params) if params is not None else (1.0, 1.0)
+        trees.append((opttrees.optimal_gather_tree(
+            m, root=root, alpha=a0, beta=b0), "opt"))
     if topology is not None and topology.hosts > 1:
         trees.append((baselines.two_level_tree(
             m, root, topology.devices_per_host), "two_level"))
@@ -352,7 +380,8 @@ def composed_dataplane_candidates(op: str, arg, root: int | None = None,
                                   segments=(1,),
                                   wave_bins=(),
                                   topology: HostTopology | None = None,
-                                  health=None) -> list[Candidate]:
+                                  health=None,
+                                  params=None) -> list[Candidate]:
     """``bucket_rounds`` variants of the composed TUW schedules, costed on
     their lowered plans.  Bucketing trades startups (more ppermutes) for
     padding (smaller payloads) — a pure α-β tradeoff the selector decides
@@ -371,6 +400,18 @@ def composed_dataplane_candidates(op: str, arg, root: int | None = None,
     ``wave_bins`` (e.g. ``(2.0,)``) adds payload-binned variants
     (``...,g2``): waves packed into geometric size bins, bounding
     within-step padding on skewed matrices — the MoE dispatch shape.
+
+    allgatherv additionally enumerates the schedule-zoo families
+    (ISSUE 10): ``opt_composed`` (the exact-DP gather tree of
+    ``repro.core.opttrees`` composed with its reversed-tree broadcast,
+    ``p <= OPT_P_MAX``; ``params`` supplies the construction α/β ratio),
+    ``pat`` (PAT-style recursive-doubling aggregated trees, ``p = 2^K``
+    — every port busy every round, ``log2 p`` total rounds),
+    ``vdg_ring`` (van-de-Geijn: the gather phase elided, ``p - 1``
+    single-block ring rounds — ``~β·M`` monolithically), and
+    ``binomial_bcast`` (+ ``(S=s)`` variants): gather + the log-time
+    optimal ``ceil(log2 p)``-round broadcast, whose pipelined re-timing
+    yields the ``ceil(log2 p) + S - 1`` stage bound.
 
     alltoallv additionally enumerates the DIRECT pairwise schedule
     (``direct`` / ``direct(g2)`` / ``direct(S=s,g2)``): exact bytes, no
@@ -399,7 +440,8 @@ def composed_dataplane_candidates(op: str, arg, root: int | None = None,
             nonlocal chain
             if s > 1 and chain is None:
                 chain = allgatherv_schedule([int(x) for x in arg],
-                                            root=root, broadcast="chain")
+                                            root=root, broadcast="chain",
+                                            topology=topology)
             return plan_allgatherv(
                 arg, root=root, bucket_rounds=b, segments=s,
                 wave_bin_ratio=wb, validate=False,
@@ -450,6 +492,38 @@ def composed_dataplane_candidates(op: str, arg, root: int | None = None,
                     continue
                 add(out, f"direct(S={s},{bin_tag(wb)})", dlower(s, wb),
                     segments=s, wave_bin_ratio=wb)
+    if op == "allgatherv":
+        # schedule zoo (ISSUE 10): families with genuinely different α/β
+        # frontiers, racing as plain candidates against tuw_composed
+        m = [int(x) for x in arg]
+        p = len(m)
+        if 2 <= p <= opttrees.OPT_P_MAX:
+            a0, b0 = (flat_alpha_beta(params) if params is not None
+                      else (1.0, 1.0))
+            ot = opttrees.optimal_gather_tree(m, root=root,
+                                              alpha=a0, beta=b0)
+            add(out, "opt_composed", plan_allgatherv(
+                arg, root=root, validate=False,
+                schedule=allgatherv_schedule(m, root=root, tree=ot)))
+        if p >= 2:
+            add(out, "vdg_ring", plan_allgatherv(
+                arg, root=root, validate=False,
+                schedule=allgatherv_schedule(m, root=root,
+                                             broadcast="vdg")))
+            bsched = allgatherv_schedule(m, root=root, broadcast="binomial",
+                                         topology=topology)
+            add(out, "binomial_bcast", plan_allgatherv(
+                arg, root=root, validate=False, schedule=bsched))
+            for s in segments:
+                if s <= 1:
+                    continue
+                add(out, f"binomial_bcast(S={s})", plan_allgatherv(
+                    arg, root=root, segments=s, validate=False,
+                    schedule=bsched), segments=s)
+            if not (p & (p - 1)):
+                add(out, "pat", plan_allgatherv(
+                    arg, root=root, validate=False,
+                    schedule=pat_allgatherv_schedule(m, root=root)))
     if topology is not None and topology.hosts > 1:
         D = topology.devices_per_host
         if op == "allgatherv":
@@ -520,8 +594,8 @@ def reduce_dataplane_candidates(op: str, arg,
                                 buckets=(1, 2, 4),
                                 segments=(1,),
                                 wave_bins=(),
-                                topology: HostTopology | None = None
-                                ) -> list[Candidate]:
+                                topology: HostTopology | None = None,
+                                health=None) -> list[Candidate]:
     """The reduction schedule space, costed on lowered fused-add plans.
 
     Three schedule families race (the ISSUE's candidate set):
@@ -547,6 +621,15 @@ def reduce_dataplane_candidates(op: str, arg,
     price it.  ``topology`` is accepted for signature parity; the
     two-level reduction schedule is future work (the flat candidates are
     correct on any mesh, just not DCN-optimal).
+
+    ``health`` (rank → link slowdown factors, or a ``LinkHealthMap``)
+    adds fault-routed variants (``tuw_reduce_health``): the per-segment
+    reduction trees rebuilt with degraded ranks demoted toward the
+    leaves, so a sick rank folds only its own partials and never relays
+    foreign partial sums over its slow links.  The fold stays in
+    deterministic rank order per segment (the schedule is a pure function
+    of ``(m, health)``), so pipelined and monolithic variants remain
+    bitwise identical.
     """
     from repro.core.jax_collectives import (plan_allreducev,
                                             plan_reduce_scatterv)
@@ -589,6 +672,15 @@ def reduce_dataplane_candidates(op: str, arg,
         for wb in wave_bins:
             add(out, f"tuw_reduce(b=1,S={s},{bin_tag(wb)})",
                 lower(tuw, 1, s, wb), segments=s, wave_bin_ratio=wb)
+    health = _norm_health(health)
+    if health:
+        htuw = reduce_scatterv_schedule(m, health=health)
+        add(out, "tuw_reduce_health(b=1)", lower(htuw))
+        for s in segments:
+            if s <= 1:
+                continue
+            add(out, f"tuw_reduce_health(b=1,S={s})", lower(htuw, 1, s),
+                segments=s)
     if p > 0 and not (p & (p - 1)):
         halving = reduce_scatterv_halving_schedule(m)
         add(out, "halving_reduce", lower(halving))
@@ -621,10 +713,10 @@ def enumerate_candidates(op: str, arg, root: int | None,
     accept :class:`~repro.core.costmodel.HierarchicalCostParams` in the
     dataplane view (the model view's extension simulators are flat-only).
     ``health`` (rank → link slowdown factors or a ``LinkHealthMap``)
-    adds fault-routed ``*_health`` variants of the byte-moving dataplane
-    schedules; the reduction ops accept it for signature parity (their
-    existing candidates re-price under the overlay, but health-shaped
-    reduction trees are future work).
+    adds fault-routed ``*_health`` variants of the byte-moving AND
+    reduction dataplane schedules (``tuw_reduce_health``: degraded
+    ranks demoted toward the leaves of every per-segment reduction
+    tree, deterministic rank-ordered folds preserved).
     """
     if op not in OPS:
         raise ValueError(f"unknown op {op!r}; expected one of {OPS}")
@@ -640,17 +732,19 @@ def enumerate_candidates(op: str, arg, root: int | None,
             return rooted_model_candidates(op, arg, root, params,
                                            include_extensions, topology)
         return rooted_dataplane_candidates(op, arg, root, buckets, segments,
-                                           topology, health=health)
+                                           topology, health=health,
+                                           params=params)
     if op in ("reduce_scatterv", "allreducev"):
         # reduction ops likewise have only the data-plane view: the fused
         # -add executor IS the machine the schedules describe
         return reduce_dataplane_candidates(op, arg, buckets=buckets,
                                            segments=segments,
                                            wave_bins=wave_bins,
-                                           topology=topology)
+                                           topology=topology, health=health)
     # composed ops have a single machine view: the schedule IS the
     # round-synchronous data plane (simulate_composed == bucket-1 steps)
     return composed_dataplane_candidates(op, arg, root=root, buckets=buckets,
                                          segments=segments,
                                          wave_bins=wave_bins,
-                                         topology=topology, health=health)
+                                         topology=topology, health=health,
+                                         params=params)

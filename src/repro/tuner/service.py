@@ -61,6 +61,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.core import opttrees
 from repro.core.costmodel import (CostParams, DegradedCostParams,
                                   HierarchicalCostParams, HostTopology,
                                   LinkHealthMap)
@@ -933,4 +934,5 @@ class PlannerService:
                 "residuals": {cls: led.stats()
                               for cls, led in self.ledgers.items()},
                 "guidelines": self.guidelines.summary(),
+                "opt_memo": opttrees.memo_stats(),
                 "metrics": self.metrics.snapshot()}

@@ -1,0 +1,411 @@
+"""Optimal-tree schedule zoo (ISSUE 10): exact DP gather/scatter trees,
+PAT aggregated trees, van-de-Geijn ring and binomial broadcast — plus the
+health-pricing bugfix regressions that ride along.
+
+The DP (``repro.core.opttrees``) is checked against TWO independent
+oracles at small p: a composition-exhaustive brute force sharing only the
+ERD closed form, and a full enumeration of every contiguous tree priced
+by ``simulate_gather`` itself (sharing nothing).  The emitted trees are
+contiguous, pass ``GatherTree.validate``, and lower through the unchanged
+zero-copy dataplane.  Construction is memoized module-wide; the planner
+test asserts warm replans actually hit it.
+"""
+import numpy as np
+import pytest
+
+from repro.core import opttrees
+from repro.core.composed import (allgatherv_schedule, pat_allgatherv_schedule,
+                                 reduce_scatterv_schedule,
+                                 simulate_reduce_dataflow)
+from repro.core.costmodel import (CostParams, DegradedCostParams,
+                                  HostTopology, flat_alpha_beta,
+                                  HierarchicalCostParams, simulate_gather,
+                                  simulate_scatter)
+from repro.core.jax_collectives import (plan_allgatherv, plan_gatherv,
+                                        plan_reduce_scatterv)
+from repro.core.pipeline import execute_reduce_scatterv_plan_numpy
+from repro.core.treegather import build_gather_tree
+from repro.obs.trace import plan_link_bytes
+from repro.tuner import PlannerService, enumerate_candidates
+from repro.tuner.candidates import _norm_health
+
+FLAT = CostParams(1e-6, 2e-11, "s", "byte")
+
+
+def _sig(rng, p, style="uniform"):
+    if style == "uniform":
+        return [int(x) for x in rng.integers(0, 40, p)]
+    if style == "skew":
+        m = [int(x) for x in rng.integers(0, 4, p)]
+        m[int(rng.integers(0, p))] = int(rng.integers(100, 400))
+        return m
+    raise ValueError(style)
+
+
+# --------------------------------------------------------------------------
+# tentpole: the DP against both oracles
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("style", ["uniform", "skew"])
+def test_dp_matches_both_oracles_small_p(style):
+    """p <= 7: DP value == composition brute force == exhaustive minimum
+    over EVERY contiguous tree priced by simulate_gather itself."""
+    rng = np.random.default_rng(11)
+    for trial in range(25):
+        p = int(rng.integers(2, 8))
+        m = _sig(rng, p, style)
+        root = int(rng.integers(0, p)) if trial % 2 else None
+        alpha = float(rng.uniform(0.0, 5.0))
+        beta = float(rng.uniform(0.01, 2.0))
+        got = opttrees.optimal_tree_cost(m, root=root, alpha=alpha, beta=beta)
+        brute = opttrees.brute_force_min_cost(m, root=root, alpha=alpha,
+                                              beta=beta)
+        exh = opttrees.exhaustive_min_cost(m, root=root, alpha=alpha,
+                                           beta=beta)
+        assert got == pytest.approx(brute, rel=1e-9, abs=1e-9)
+        assert got == pytest.approx(exh, rel=1e-9, abs=1e-9)
+
+
+def test_dp_matches_brute_force_up_to_p10():
+    """The acceptance bound: exact at p <= 10 (inside EXACT_FRONTIER_P)."""
+    rng = np.random.default_rng(23)
+    for trial in range(15):
+        p = int(rng.integers(8, 11))
+        m = _sig(rng, p, "skew" if trial % 2 else "uniform")
+        root = int(rng.integers(0, p)) if trial % 3 else None
+        got = opttrees.optimal_tree_cost(m, root=root, alpha=1.7, beta=0.3)
+        brute = opttrees.brute_force_min_cost(m, root=root, alpha=1.7,
+                                              beta=0.3)
+        assert got == pytest.approx(brute, rel=1e-9, abs=1e-9)
+
+
+def test_emitted_tree_achieves_dp_value_and_validates():
+    """The TREE (not just the value): simulate_gather of the emitted tree
+    equals the DP optimum, the reversed tree scatters in the same time,
+    and the structural invariants (contiguity included) all hold."""
+    rng = np.random.default_rng(5)
+    for _ in range(30):
+        p = int(rng.integers(2, 11))
+        m = _sig(rng, p)
+        root = int(rng.integers(0, p))
+        alpha, beta = 2.0, 0.05
+        t = opttrees.optimal_gather_tree(m, root=root, alpha=alpha, beta=beta)
+        assert t.root == root and t.contiguous and t.name == "opt"
+        t.validate(m)
+        P = CostParams(alpha, beta)
+        want = opttrees.optimal_tree_cost(m, root=root, alpha=alpha,
+                                          beta=beta)
+        assert simulate_gather(t, P) == pytest.approx(want, rel=1e-9)
+        # scatter is time-symmetric: the same tree serves the last leaf
+        # in exactly the optimal gather time
+        assert simulate_scatter(t, P) == pytest.approx(want, rel=1e-9)
+
+
+def test_opt_never_worse_than_tuw_or_linear():
+    rng = np.random.default_rng(9)
+    P = CostParams(3.0, 0.02)
+    for _ in range(20):
+        p = int(rng.integers(2, opttrees.OPT_P_MAX + 1))
+        m = _sig(rng, p, "skew")
+        root = int(rng.integers(0, p))
+        opt = opttrees.optimal_gather_tree(m, root=root, alpha=P.alpha,
+                                           beta=P.beta)
+        c_opt = simulate_gather(opt, P)
+        for other in (build_gather_tree(m, root=root),
+                      __import__("repro.core.baselines",
+                                 fromlist=["linear_tree"]).linear_tree(m, root)):
+            assert c_opt <= simulate_gather(other, P) + 1e-9
+
+
+def test_opt_tree_lowers_through_zero_copy_dataplane():
+    """``reversed_for_scatter`` + the zero-copy plan lowering accept the
+    DP tree unchanged: exact bytes, validated internally."""
+    m = [7, 0, 31, 4, 12, 2, 9, 16]
+    t = opttrees.optimal_gather_tree(m, root=3, alpha=1.0, beta=0.1)
+    plan = plan_gatherv(m, 3, tree=t)
+    assert plan.tree_bytes_exact == t.total_bytes_moved()
+    # the scatter executor runs the SAME plan's steps in reverse
+    # (scatterv_shard); the reversed tree only re-times, never re-routes
+    sc = t.reversed_for_scatter()
+    assert sc.rounds == t.rounds
+    assert sorted((e.child, e.parent, e.size, e.lo, e.hi) for e in sc.edges) \
+        == sorted((e.child, e.parent, e.size, e.lo, e.hi) for e in t.edges)
+
+
+def test_exact_zone_flag_and_beam_cap():
+    """p <= EXACT_FRONTIER_P solves exactly; above, the beam cap may
+    truncate frontiers (exact=False is allowed, the value still bounds
+    tuw from below or matches it)."""
+    rng = np.random.default_rng(3)
+    m_small = _sig(rng, 9)
+    s = opttrees._Solver(m_small, 1.0, 1.0)
+    assert s.exact
+    m_big = _sig(rng, opttrees.OPT_P_MAX)
+    sb = opttrees._Solver(m_big, 1.0, 1.0)
+    t = opttrees.optimal_gather_tree(m_big, root=0)
+    t.validate(m_big)   # heuristic zone still emits valid trees
+
+
+def test_memo_hits_on_repeat_and_ratio_keying():
+    opttrees.clear_memo()
+    m = [5, 9, 1, 14, 3, 8]
+    t1 = opttrees.optimal_gather_tree(m, root=2, alpha=2.0, beta=0.5)
+    s1 = opttrees.memo_stats()
+    assert s1["opt_memo_misses"] == 1 and s1["opt_memo_hits"] == 0
+    # same ratio alpha/beta = 4 → memo hit, same object
+    t2 = opttrees.optimal_gather_tree(m, root=2, alpha=8.0, beta=2.0)
+    s2 = opttrees.memo_stats()
+    assert s2["opt_memo_hits"] == 1 and s2["opt_memo_misses"] == 1
+    assert t2 is t1
+    # different ratio → miss
+    opttrees.optimal_gather_tree(m, root=2, alpha=1.0, beta=100.0)
+    assert opttrees.memo_stats()["opt_memo_misses"] == 2
+
+
+def test_enumerate_contiguous_trees_counts():
+    """Sanity on the exhaustive oracle itself: every emitted edge set is a
+    valid contiguous tree, and the count is super-exponential in p."""
+    seen = 0
+    for root, edges in opttrees.enumerate_contiguous_trees(4):
+        assert len(edges) == 3
+        seen += 1
+    assert seen > 4   # strictly more trees than roots
+
+
+# --------------------------------------------------------------------------
+# tentpole: the zoo schedules (vdg / binomial / pat) are legal dataflows
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("p", [2, 4, 8, 16])
+def test_vdg_and_pat_schedules_deliver_everything(p):
+    rng = np.random.default_rng(p)
+    m = [int(x) for x in rng.integers(0, 30, p)]
+    nonzero = {i for i in range(p) if m[i] > 0}
+    for sched in (allgatherv_schedule(m, broadcast="vdg"),
+                  pat_allgatherv_schedule(m)):
+        sched.validate()
+        cov = sched.simulate_dataflow()
+        for i in range(p):
+            assert nonzero <= cov.get((i, 0), set())
+    # vdg: p-1 single-block ring rounds, max payload max(m)
+    v = allgatherv_schedule(m, broadcast="vdg")
+    if nonzero:
+        assert v.num_rounds == p - 1
+        assert max(t.size for rnd in v.rounds for t in rnd) == max(m)
+    # pat: exactly log2(p) rounds, every rank busy every round
+    t = pat_allgatherv_schedule(m)
+    if nonzero:
+        assert t.num_rounds <= p.bit_length() - 1
+
+
+@pytest.mark.parametrize("p", [3, 5, 12])
+def test_pat_requires_power_of_two(p):
+    with pytest.raises(ValueError):
+        pat_allgatherv_schedule([2] * p)
+
+
+@pytest.mark.parametrize("p", [2, 5, 8, 13])
+def test_binomial_broadcast_delivers_in_log_rounds(p):
+    rng = np.random.default_rng(100 + p)
+    m = [int(x) for x in rng.integers(1, 30, p)]
+    tree = build_gather_tree(m, root=0)
+    base = allgatherv_schedule(m, root=0)           # reversed-tree bcast
+    sched = allgatherv_schedule(m, root=0, broadcast="binomial")
+    sched.validate()
+    cov = sched.simulate_dataflow()
+    for i in range(p):
+        assert set(range(p)) <= cov.get((i, 0), set())
+    # broadcast phase: exactly ceil(log2 p) doubling rounds
+    d = (p - 1).bit_length()
+    assert sched.num_rounds == tree.rounds + d
+
+
+def test_zoo_candidates_enumerated_and_buildable():
+    m = [3, 9, 1, 6, 2, 8, 4, 5]
+    cands = enumerate_candidates("allgatherv", m, None, FLAT,
+                                 view="dataplane", segments=(1, 4))
+    names = {c.name for c in cands}
+    assert {"opt_composed", "vdg_ring", "binomial_bcast",
+            "binomial_bcast(S=4)", "pat"} <= names
+    for c in cands:
+        assert c.cost(FLAT) > 0
+        c.build()
+    # non-power-of-two p: pat drops out, the rest stay
+    names9 = {c.name for c in enumerate_candidates(
+        "allgatherv", m + [2], None, FLAT, view="dataplane")}
+    assert "pat" not in names9
+    assert {"opt_composed", "vdg_ring", "binomial_bcast"} <= names9
+    # rooted ops grow the opt candidate in both views
+    assert any(c.name.startswith("opt") for c in enumerate_candidates(
+        "gatherv", m, 2, FLAT, view="dataplane"))
+    assert any(c.name == "opt" for c in enumerate_candidates(
+        "gatherv", m, 2, FLAT, view="model"))
+
+
+def test_planner_warm_replans_hit_opt_memo():
+    """Two services (distinct PlanCaches) enumerating the same quantized
+    signature share the module-wide construction memo: the second
+    enumeration is all hits, and stats() surfaces the counters."""
+    opttrees.clear_memo()
+    m = [4, 13, 2, 8, 1, 6, 9, 3]
+    svc1 = PlannerService(mesh=None, quantum=1, params=FLAT)
+    svc1.plan_record("allgatherv", m, row_bytes=64)
+    s1 = opttrees.memo_stats()
+    assert s1["opt_memo_misses"] >= 1
+    svc2 = PlannerService(mesh=None, quantum=1, params=FLAT)
+    svc2.plan_record("allgatherv", m, row_bytes=64)
+    s2 = opttrees.memo_stats()
+    assert s2["opt_memo_misses"] == s1["opt_memo_misses"], (
+        "warm replan rebuilt the opt tree instead of hitting the memo")
+    assert s2["opt_memo_hits"] > s1["opt_memo_hits"]
+    assert svc2.stats["opt_memo"]["opt_memo_hits"] == s2["opt_memo_hits"]
+
+
+def test_flat_alpha_beta_unwraps_every_params_shape():
+    flat = CostParams(2.0, 0.5)
+    assert flat_alpha_beta(flat) == (2.0, 0.5)
+    topo = HostTopology(2, 4)
+    hier = HierarchicalCostParams(CostParams(1.0, 0.1),
+                                  CostParams(50.0, 0.8), topo)
+    assert flat_alpha_beta(hier) == (50.0, 0.8)
+    deg = DegradedCostParams(flat, {1: 3.0})
+    assert flat_alpha_beta(deg) == (2.0, 0.5)
+
+
+# --------------------------------------------------------------------------
+# satellite 1: _norm_health / tree-build health semantics (f > 1 only)
+# --------------------------------------------------------------------------
+
+def test_norm_health_keeps_only_slowdowns():
+    """REGRESSION (fails pre-fix): a faster-than-baseline rank (f < 1)
+    is NOT degraded and must not enter the health map."""
+    assert _norm_health({1: 0.5, 3: 2.0}) == {3: 2.0}
+    assert _norm_health({1: 0.5, 2: 0.9}) == {}
+    assert _norm_health(None) == {}
+
+
+def test_fast_ranks_do_not_perturb_health_trees():
+    """REGRESSION (fails pre-fix): a mixed faster/slower map must build
+    the SAME tree as the slower-only map — the f < 1 entry used to flip
+    free merges and promote the fast rank."""
+    m = [16, 8, 15, 6, 4, 15, 17, 1]
+    fast, slow = 0, 5
+    mixed = build_gather_tree(m, health={fast: 0.5, slow: 3.0})
+    slow_only = build_gather_tree(m, health={slow: 3.0})
+    assert sorted((e.child, e.parent) for e in mixed.edges) == \
+        sorted((e.child, e.parent) for e in slow_only.edges)
+    # the fast rank keeps its interior (forwarding) children
+    assert sum(1 for e in mixed.edges if e.parent == fast) >= 1
+    # a map of ONLY fast ranks is a no-op: baseline tree, baseline name
+    only_fast = build_gather_tree(m, health={fast: 0.5})
+    assert only_fast.name == "tuw"
+    base = build_gather_tree(m)
+    assert sorted((e.child, e.parent) for e in only_fast.edges) == \
+        sorted((e.child, e.parent) for e in base.edges)
+
+
+def test_fast_only_map_enumerates_no_health_variants():
+    m = [3, 9, 1, 6, 2, 8, 4, 5]
+    names = {c.name for c in enumerate_candidates(
+        "gatherv", m, 0, FLAT, view="dataplane", health={2: 0.5})}
+    assert not any("health" in n for n in names)
+
+
+# --------------------------------------------------------------------------
+# satellite 2: health-shaped reduction trees
+# --------------------------------------------------------------------------
+
+def test_reduce_health_schedule_demotes_degraded_rank():
+    """A degraded rank folds only its own contribution: in every segment
+    tree it does not own, it has no children (never accumulates foreign
+    partial sums over its slow link)."""
+    p, sick = 8, 7   # rank 7 is interior in the oblivious unit trees
+    assert any(e.parent == sick
+               for e in build_gather_tree([1] * p, root=0).edges)
+    for j in range(p):
+        t = build_gather_tree([1] * p, root=j, health={sick: 3.0})
+        if j != sick:
+            assert not any(e.parent == sick for e in t.edges)
+    m = [5, 9, 2, 7, 1, 4, 6, 3]
+    hs = reduce_scatterv_schedule(m, health={sick: 3.0})
+    simulate_reduce_dataflow(hs)   # still folds every rank exactly once
+    # and it genuinely differs from the oblivious schedule
+    assert hs.rounds != reduce_scatterv_schedule(m).rounds
+
+
+def test_reduce_health_pipelined_matches_monolithic_bitwise():
+    """REGRESSION: pipelined == monolithic BITWISE under a degraded map
+    (the fold order is the tree's round order either way)."""
+    m = [5, 9, 2, 7, 1, 4, 6, 3]
+    health = {2: 3.0, 6: 2.0}
+    hs = reduce_scatterv_schedule(m, health=health)
+    rng = np.random.default_rng(4)
+    contribs = [rng.standard_normal((int(sum(m)), 4)).astype(np.float32)
+                for _ in range(len(m))]
+    mono = execute_reduce_scatterv_plan_numpy(
+        plan_reduce_scatterv(m, schedule=hs), contribs)
+    piped = execute_reduce_scatterv_plan_numpy(
+        plan_reduce_scatterv(m, segments=4, schedule=hs), contribs)
+    for a, b in zip(mono, piped):
+        np.testing.assert_array_equal(a, b)
+    # deterministic in (m, health): a rebuild folds identically
+    again = execute_reduce_scatterv_plan_numpy(
+        plan_reduce_scatterv(m, schedule=reduce_scatterv_schedule(
+            m, health=health)), contribs)
+    for a, b in zip(mono, again):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_reduce_health_candidates_enumerated():
+    m = [5, 9, 2, 7, 1, 4, 6, 3]
+    for op in ("reduce_scatterv", "allreducev"):
+        names = {c.name for c in enumerate_candidates(
+            op, m, None, FLAT, view="dataplane", segments=(1, 2),
+            health={2: 3.0})}
+        assert "tuw_reduce_health(b=1)" in names
+        assert "tuw_reduce_health(b=1,S=2)" in names
+    # healthy map → no health variants
+    names = {c.name for c in enumerate_candidates(
+        "reduce_scatterv", m, None, FLAT, view="dataplane")}
+    assert not any("health" in n for n in names)
+
+
+# --------------------------------------------------------------------------
+# satellite 3: host-major chain broadcast (DCN bytes at flat-chain minimum)
+# --------------------------------------------------------------------------
+
+def test_chain_broadcast_crosses_each_dcn_link_once():
+    """REGRESSION (fails pre-fix): the chain used to run in raw index
+    order from the root, crossing the DCN once per host boundary it
+    straddles; host-major ordering drops it to the hosts-1 minimum."""
+    p, hosts, D, root = 16, 4, 4, 5
+    topo = HostTopology(hosts, D)
+    rng = np.random.default_rng(1)
+    m = [int(x) for x in rng.integers(1, 20, p)]
+    total = sum(m)
+    aware = allgatherv_schedule(m, root=root, broadcast="chain",
+                                topology=topo)
+    aware.validate()
+    cov = aware.simulate_dataflow()
+    for i in range(p):
+        assert set(range(p)) <= cov.get((i, 0), set())
+    oblivious = allgatherv_schedule(m, root=root, broadcast="chain")
+
+    def bcast_crossings(sched):
+        return sum(1 for rnd in sched.rounds for t in rnd
+                   if (t.lo, t.hi) == (0, p - 1)
+                   and not topo.same_host(t.src, t.dst))
+
+    assert bcast_crossings(aware) == hosts - 1          # the minimum
+    assert bcast_crossings(oblivious) > hosts - 1       # fails pre-fix
+    # the lowered plans agree: DCN bytes drop by exactly the broadcast
+    # re-crossings eliminated (plan_link_bytes is the span-schema truth)
+    gather_dcn = sum(e.size for e in build_gather_tree(m, root=root).edges
+                     if not topo.same_host(e.child, e.parent))
+    steps = plan_allgatherv(m, root=root, validate=False,
+                            schedule=aware).steps
+    got = plan_link_bytes(steps, topo)
+    assert got["dcn"] == gather_dcn + (hosts - 1) * total
+    steps_obl = plan_allgatherv(m, root=root, validate=False,
+                                schedule=oblivious).steps
+    assert plan_link_bytes(steps_obl, topo)["dcn"] > got["dcn"]

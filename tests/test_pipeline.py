@@ -237,12 +237,26 @@ def test_simulate_pipelined_matches_closed_form_on_a_chain():
 # ------------------------------------------------------------ tuner coupling
 
 def test_tuner_selects_pipelined_for_large_messages_only():
+    """Pipelining pays only at large M.  Since the schedule zoo the
+    OUTRIGHT large-M flat-allgatherv winner is a bandwidth-optimal
+    monolithic schedule (PAT / van-de-Geijn ring move ~2βM without
+    chunking), so the differential claim is scoped to the composed-tree
+    family: chunked variants must beat the monolithic composed tree at
+    large M and lose at small M."""
     svc = PlannerService(quantum=128)
     small = svc.plan_record("allgatherv", [64] * 16, row_bytes=4)
     assert small.plan.segments == 1, small.algo
     big = svc.plan_record("allgatherv", [4_000_000] * 16, row_bytes=4)
-    assert big.plan.segments > 1, big.algo
-    assert "S=" in big.algo
+    big_costs = dict(big.costs)
+    assert (big_costs["tuw_composed(b=1,S=8)"]
+            < big_costs["tuw_composed(b=1)"]), big.costs
+    small_costs = dict(small.costs)
+    assert (small_costs["tuw_composed(b=1)"]
+            < small_costs["tuw_composed(b=1,S=8)"]), small.costs
+    # the large-M winner is a monolithic bandwidth-optimal zoo schedule
+    # or (if those ever lose ground) a pipelined composed tree
+    assert big.algo in ("pat", "vdg_ring") or big.plan.segments > 1, \
+        big.algo
     # the scoreboard carries every pipelined variant
     names = {n for n, _ in big.costs}
     assert {"tuw_composed(b=1,S=2)", "tuw_composed(b=1,S=4)",
@@ -250,14 +264,29 @@ def test_tuner_selects_pipelined_for_large_messages_only():
 
 
 def test_pipelined_plans_round_trip_the_cache(tmp_path):
+    # service-level round trip: whatever wins the large-M race (a
+    # monolithic zoo schedule today) must come back identical from disk
     cache_dir = str(tmp_path / "plans")
     svc1 = PlannerService(quantum=128, cache_dir=cache_dir)
     r1 = svc1.plan_record("allgatherv", [4_000_000] * 16, row_bytes=4)
     svc2 = PlannerService(quantum=128, cache_dir=cache_dir)
     r2 = svc2.plan_record("allgatherv", [4_000_000] * 16, row_bytes=4)
     assert (svc2.plan_hits, svc2.plan_misses) == (1, 0)
-    assert r2.plan.segments == r1.plan.segments > 1
+    assert r2.plan.segments == r1.plan.segments
     assert r2.plan.stage_ids == r1.plan.stage_ids
+    # segments > 1 (de)serialization, exercised at the cache layer since
+    # selection no longer surfaces a chunked winner on flat meshes
+    from repro.tuner.cache import PlanCache, PlanKey
+    plan = plan_allgatherv([128] * 16, root=0, segments=8)
+    assert plan.segments == 8
+    key = PlanKey("allgatherv", 16, tuple([128] * 16), -1, "float32",
+                  "round-trip-test")
+    pdir = str(tmp_path / "pipelined")
+    PlanCache(path=pdir).put(key, plan)
+    got = PlanCache(path=pdir).get(key)   # fresh instance: loads from disk
+    assert got.segments == plan.segments
+    assert got.stage_ids == plan.stage_ids
+    assert [repr(s) for s in got.steps] == [repr(s) for s in plan.steps]
 
 
 # ------------------------------------------------------- multi-device child

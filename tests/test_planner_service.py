@@ -76,7 +76,13 @@ def test_row_bytes_scaling_can_flip_bucket_choice():
     lat = PlannerService(mesh=None, quantum=1,
                          params=CostParams(1e-3, 1e-12, "s", "byte"))
     rec_lat = lat.plan_record("gatherv", sizes, root=0, row_bytes=1)
-    assert rec_lat.algo == "tuw(b=1)", rec_lat.costs
+    # the DP optimal tree ties the TUW tree exactly here (same shape in
+    # the α-dominated regime), so either name may take the argmin — the
+    # claim under test is the bucket, not the family
+    assert rec_lat.algo in ("tuw(b=1)", "opt(b=1)"), rec_lat.costs
+    costs_lat = dict(rec_lat.costs)
+    assert costs_lat["tuw(b=1)"] <= min(
+        v for k, v in costs_lat.items() if k.startswith("tuw("))
     bw = PlannerService(mesh=None, quantum=1,
                         params=CostParams(1e-9, 1e-7, "s", "byte"))
     rec_bw = bw.plan_record("gatherv", sizes, root=0, row_bytes=65_536)
